@@ -1,0 +1,51 @@
+"""Paper Table 5 / Fig. 10 analog: kernel-level throughput.
+
+Effective bandwidth (GB/s over the algorithmically-required bytes) of the
+SpMM backends and the eMA kernel on this host. The paper's claim: the
+GraphBLAS formulation turns irregular per-vertex traversal into streaming
+kernels that saturate memory bandwidth (their eMA hits ~110+ GB/s on
+Skylake; the segment/ELL XLA paths here play that role on CPU).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.colorsets import split_tables
+from repro.graph import rmat
+from repro.kernels.ema.ops import ema_xla
+from repro.kernels.spmm import ops as spmm_ops
+
+N_ROWS = 64
+
+
+def run() -> dict:
+    g = rmat(13, 16, seed=2)   # 8192 vertices, ~260k directed edges
+    rng = np.random.default_rng(0)
+    m = jnp.asarray(rng.random((N_ROWS, g.n), np.float32))
+    out = {}
+
+    for method in ("segment", "ell", "dense"):
+        prep = spmm_ops.prepare(g, method)
+        sec = timeit(lambda: spmm_ops.spmm(m, prep))
+        # required traffic: read m values once per edge + write out
+        bytes_req = 4 * (g.m * N_ROWS + 2 * g.n * N_ROWS)
+        gbs = bytes_req / sec / 1e9
+        emit(f"table5/spmm_{method}", sec * 1e6, f"{gbs:.1f}GB/s")
+        out[f"spmm_{method}"] = gbs
+
+    # eMA: k=10 sub-template of size 5 split 2+3
+    ia, ip = split_tables(10, 5, 2)
+    m_a = jnp.asarray(rng.random((45, g.n), np.float32))
+    y_p = jnp.asarray(rng.random((120, g.n), np.float32))
+    ia_j, ip_j = jnp.asarray(ia), jnp.asarray(ip)
+    sec = timeit(lambda: ema_xla(m_a, y_p, ia_j, ip_j))
+    s, l = ia.shape
+    bytes_req = 4 * g.n * (2 * s * l + s)
+    gbs = bytes_req / sec / 1e9
+    flops = 2 * g.n * s * l / sec / 1e9
+    emit("table5/ema_xla", sec * 1e6, f"{gbs:.1f}GB/s|{flops:.1f}GFLOP/s")
+    out["ema"] = gbs
+    return out

@@ -1,0 +1,52 @@
+"""Paper Fig. 11: roofline placement of the three engines on this host.
+
+Measures achieved GFLOP/s and operational intensity (useful flops / required
+bytes) per engine; the paper's claim is that PGBSC moves from the latency
+region to the bandwidth roof. Host peaks are measured crudely with a matmul
+(compute) and a triad (bandwidth) microbenchmark.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import build_engine, get_template
+from repro.graph import rmat
+from repro.graph.coloring import coloring_numpy
+
+
+def _host_peaks() -> tuple[float, float]:
+    a = jnp.asarray(np.random.default_rng(0).random((1024, 1024), np.float32))
+    mm = jax.jit(lambda x: x @ x)
+    sec = timeit(lambda: mm(a))
+    flops = 2 * 1024 ** 3 / sec
+    v = jnp.asarray(np.random.default_rng(1).random(1 << 24, np.float32))
+    triad = jax.jit(lambda x: x * 2.0 + 1.0)
+    sec_b = timeit(lambda: triad(v))
+    bw = 3 * v.nbytes / sec_b
+    return flops, bw
+
+
+def run() -> dict:
+    peak_flops, peak_bw = _host_peaks()
+    emit("fig11/host_peak", 0.0,
+         f"{peak_flops / 1e9:.1f}GFLOPs|{peak_bw / 1e9:.1f}GB/s")
+    g = rmat(11, 16, seed=0)
+    t = get_template("u7")
+    colors = coloring_numpy(0, 0, g.n, t.k)
+    out = {}
+    for eng_name in ("fascia", "pfascia", "pgbsc"):
+        e = build_engine(g, t, eng_name)
+        sec = timeit(lambda: e.count_colorful(colors)[0])
+        flops = e.work.total_flops
+        bytes_req = e.work.table_bytes * 3  # read a+p, write out (approx)
+        gflops = flops / sec / 1e9
+        oi = flops / bytes_req
+        frac_roof = min(gflops * 1e9 / min(peak_flops, oi * peak_bw), 9.99)
+        emit(f"fig11/{eng_name}", sec * 1e6,
+             f"{gflops:.2f}GFLOPs|OI={oi:.2f}|roof={frac_roof * 100:.0f}%")
+        out[eng_name] = {"gflops": gflops, "oi": oi, "roof_frac": frac_roof}
+    return out

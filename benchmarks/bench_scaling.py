@@ -1,0 +1,67 @@
+"""Paper Fig. 13 analog: scaling of the distributed engine with device count.
+
+Thread scaling on the paper's Skylake node becomes device scaling of the
+shard_map ring engine here (1 real core under the hood, so this measures
+partitioning overhead, not true speedup — the trend of interest is that the
+ring decomposition stays correct and the per-device work shrinks).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import emit
+
+_WORKER = """
+import os, sys, json, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d"
+import jax
+from repro.core import get_template
+from repro.core.distributed import DistributedPgbsc
+from repro.graph import rmat
+
+d = %d
+g = rmat(10, 16, seed=7)
+t = get_template("u5")
+mesh = jax.make_mesh((d, 1), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+dist = DistributedPgbsc(g, t, mesh)
+step, args, _ = dist.count_step_fn()
+f = jax.jit(step)
+out = f(*args); out.block_until_ready()
+t0 = time.time()
+for _ in range(3):
+    out = f(*args)
+out.block_until_ready()
+print(json.dumps({"devices": d, "sec": (time.time() - t0) / 3,
+                  "count": float(out[0])}))
+"""
+
+
+def run() -> dict:
+    out = {}
+    counts = {}
+    for d in (1, 2, 4, 8):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = "src"
+        proc = subprocess.run(
+            [sys.executable, "-c", _WORKER % (d, d)], env=env,
+            capture_output=True, text=True, timeout=600)
+        if proc.returncode != 0:
+            emit(f"fig13/devices{d}", -1, "FAILED")
+            continue
+        rec = json.loads(proc.stdout.strip().splitlines()[-1])
+        emit(f"fig13/devices{d}", rec["sec"] * 1e6,
+             f"count={rec['count']:.6g}")
+        out[d] = rec["sec"]
+        counts[d] = rec["count"]
+    # ring decomposition must be device-count invariant up to f32
+    # reassociation (counts here exceed 2^24, so exactness doesn't apply)
+    vals = list(counts.values())
+    if vals:
+        spread = (max(vals) - min(vals)) / max(abs(max(vals)), 1e-30)
+        assert spread < 1e-6, counts
+    return out

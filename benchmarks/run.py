@@ -1,0 +1,56 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig8,fig9,...]
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks.common import header
+
+BENCHES = {
+    "fig8_engines": "benchmarks.bench_engines",
+    "fig9_pruning": "benchmarks.bench_pruning",
+    "table5_kernels": "benchmarks.bench_kernels",
+    "fig11_roofline": "benchmarks.bench_roofline",
+    "fig13_scaling": "benchmarks.bench_scaling",
+    "fig14_error": "benchmarks.bench_error",
+    "plans_beyond_paper": "benchmarks.bench_plans",
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all",
+                    help="comma-separated bench keys (see BENCHES)")
+    args = ap.parse_args(argv)
+    keys = list(BENCHES) if args.only == "all" else args.only.split(",")
+
+    header()
+    failures = []
+    for key in keys:
+        mod_name = BENCHES[key]
+        t0 = time.time()
+        print(f"# --- {key} ({mod_name}) ---", flush=True)
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            mod.run()
+            print(f"# {key} done in {time.time() - t0:.1f}s", flush=True)
+        except Exception:
+            failures.append(key)
+            print(f"# {key} FAILED:\n{traceback.format_exc()}", flush=True)
+    if failures:
+        print(f"# FAILURES: {failures}")
+        return 1
+    print("# all benchmarks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

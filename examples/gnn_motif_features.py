@@ -1,0 +1,104 @@
+"""Motif-count features (the paper's engine) feeding a GraphSAGE classifier.
+
+GSN-style integration: per-vertex subgraph-count estimates from PGBSC become
+structural input features for the assigned GNN architectures. Trains two
+GraphSAGE models — with and without motif features — on a synthetic
+community-structured graph where motif counts are discriminative.
+
+    PYTHONPATH=src python examples/gnn_motif_features.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.core.motif_features import motif_features
+from repro.graph import Graph
+from repro.models.gnn import gnn_forward, gnn_loss, init_gnn
+from repro.optim.optimizer import AdamWConfig, adamw_update, init_adamw
+
+# --- one connected graph, two planted vertex roles, degree-matched --------
+# role 0 "pendant-star anchor": 5 extra leaf neighbors (star4-rich,
+#        path4-poor: paths die at the leaves)
+# role 1 "connected hub": 5 extra edges into the ER core (path4-rich)
+# Degrees match, so only multi-hop tree-motif structure separates the roles —
+# exactly what the paper's engine counts. Evaluation is on HELD-OUT nodes.
+rng = np.random.default_rng(0)
+n_core, n_roles = 120, 40
+edges = [(i, int(x)) for i in range(n_core)
+         for x in rng.integers(0, n_core, 2)]
+anchors = rng.choice(n_core, n_roles * 2, replace=False)
+labels_full = np.full(n_core, -1, np.int64)
+nxt = n_core
+for j, v in enumerate(anchors):
+    role = j % 2
+    labels_full[v] = role
+    if role == 0:
+        for _ in range(5):                    # pendant leaves
+            edges.append((int(v), nxt))
+            nxt += 1
+    else:
+        for x in rng.integers(0, n_core, 5):  # edges into the core
+            edges.append((int(v), int(x)))
+g = Graph.from_edges(nxt, np.asarray(edges))
+labels = np.zeros(g.n, np.int32)
+labels[anchors] = labels_full[anchors]
+role_nodes = anchors
+d0 = g.degrees[anchors[::2]].mean()
+d1 = g.degrees[anchors[1::2]].mean()
+print(f"avg degree: role0={d0:.1f} role1={d1:.1f} (matched)")
+train_mask = np.zeros(g.n, np.float32)
+train_mask[anchors[: n_roles]] = 1.0          # half the anchors train
+eval_nodes = anchors[n_roles:]
+
+# --- motif features from the paper's engine --------------------------------
+feats_motif = motif_features(g, ["u3", "path4", "star4"], n_iters=8, seed=1)
+print("motif feature matrix:", feats_motif.shape,
+      "\n  role0 (pendant-star) means:",
+      feats_motif[anchors[::2]].mean(0).round(2),
+      "\n  role1 (connected-hub) means:",
+      feats_motif[anchors[1::2]].mean(0).round(2))
+
+base_x = rng.normal(size=(g.n, 8)).astype(np.float32)  # uninformative
+
+
+def train(x, tag):
+    arch = reduced_config("graphsage-reddit")
+    cfg = arch.model
+    src, dst = g.edges_by_dst
+    batch = {
+        "x": jnp.asarray(x),
+        "edge_index": jnp.asarray(np.stack([src, dst])),
+        "labels": jnp.asarray(labels),
+        "label_mask": jnp.asarray(train_mask),
+        "node_graph": jnp.zeros((g.n,), jnp.int32),
+    }
+    params = init_gnn(jax.random.PRNGKey(0), cfg, d_in=x.shape[1])
+    opt = init_adamw(params)
+    ocfg = AdamWConfig(lr=1e-2, warmup_steps=5, total_steps=200,
+                       weight_decay=0.0)
+    full = dict(batch, pool=False, n_graphs=1)
+
+    @jax.jit
+    def step(params, opt):
+        loss, grads = jax.value_and_grad(
+            lambda p: gnn_loss(p, cfg, full))(params)
+        params, opt, m = adamw_update(ocfg, params, grads, opt)
+        return params, opt, loss
+
+    for it in range(150):
+        params, opt, loss = step(params, opt)
+    logits = gnn_forward(params, cfg, full)
+    pred = np.asarray(jnp.argmax(logits, -1))
+    acc = float((pred[eval_nodes] == labels[eval_nodes]).mean())
+    print(f"{tag:28s} final_loss={float(loss):.4f} "
+          f"held-out accuracy={acc:.3f}")
+    return acc
+
+
+acc_base = train(base_x, "random features")
+acc_motif = train(np.concatenate([base_x, feats_motif], 1),
+                  "random + motif features")
+print(f"motif-feature gain on held-out anchors: "
+      f"+{(acc_motif - acc_base) * 100:.1f} pts")

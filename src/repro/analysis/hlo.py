@@ -1,0 +1,110 @@
+"""Parse collective-communication bytes out of optimized HLO text.
+
+``compiled.cost_analysis()`` has no collective term, so we walk
+``compiled.as_text()`` for all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops. Optimized HLO lines look like
+
+    %ppermute.90 = f32[1,37504]{1,0} collective-permute(%fusion), ...
+
+operands are %refs without inline shapes, so we account the *result* shape
+bytes per op — for all-reduce/permute/all-to-all this equals the operand
+size; for all-gather it's the gathered size (an upper bound ~(g-1)/g of the
+per-device wire traffic); for reduce-scatter we scale the result by the group
+size parsed from replica_groups. The convention is recorded in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["collective_bytes", "collective_summary", "count_ops"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# "%name = f32[8,128]{1,0} op-name(" — capture dtype, dims, op
+_LINE_RE = re.compile(
+    r"=\s*(?:\([^=]*?\)\s*)?([a-z]+[0-9]*(?:e[0-9]+m[0-9]+)?)"
+    r"\[([0-9,]*)\](?:\{[^}]*\})?\s+([a-z0-9\-]+?)(-start|-done)?\(")
+
+# tuple-result async form: "%x = (f32[..], f32[..]) all-gather-start("
+_TUPLE_RE = re.compile(r"=\s*\(([^)]*)\)\s*([a-z0-9\-]+?)(-start|-done)?\(")
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]*(?:e[0-9]+m[0-9]+)?)\[([0-9,]*)\]")
+
+_GROUP_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUP_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = _GROUP_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUP_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def collective_summary(hlo_text: str) -> dict[str, dict]:
+    """Per-collective-kind {count, bytes} using result-shape accounting."""
+    out: dict[str, dict] = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        op = None
+        nbytes = 0
+        suffix = None
+        m = _LINE_RE.search(s)
+        if m and m.group(3) in _COLLECTIVES:
+            op, suffix = m.group(3), m.group(4)
+            nbytes = _shape_bytes(m.group(1), m.group(2))
+        else:
+            mt = _TUPLE_RE.search(s)
+            if mt and mt.group(2) in _COLLECTIVES:
+                op, suffix = mt.group(2), mt.group(3)
+                # async tuple: (operand_shape, result_shape, ...) — take the
+                # last shape (result) to match the sync-form convention
+                shapes = _SHAPE_RE.findall(mt.group(1))
+                if shapes:
+                    nbytes = _shape_bytes(*shapes[-1])
+        if op is None or suffix == "-done":
+            continue
+        if op == "reduce-scatter":
+            nbytes *= _group_size(s)
+        out[op]["count"] += 1
+        out[op]["bytes"] += nbytes
+    return dict(out)
+
+
+def collective_bytes(hlo_text: str) -> int:
+    return sum(v["bytes"] for v in collective_summary(hlo_text).values())
+
+
+def count_ops(hlo_text: str, names=("fusion", "custom-call", "convolution",
+                                    "dot")) -> dict[str, int]:
+    counts = {n: 0 for n in names}
+    pat = re.compile(r"=\s*(?:\([^=]*?\)\s*)?(?:[a-z0-9]+\[[0-9,]*\]"
+                     r"(?:\{[^}]*\})?\s+)?([a-z0-9\-]+)\(")
+    for line in hlo_text.splitlines():
+        m = pat.search(line.strip())
+        if m and m.group(1) in counts:
+            counts[m.group(1)] += 1
+    return counts

@@ -1,0 +1,122 @@
+"""Roofline terms from a compiled dry-run artifact (TPU v5e targets).
+
+    compute    = HLO_FLOPs / (chips * 197e12)          [bf16 MXU]
+    memory     = HLO_bytes / (chips * 819e9)           [HBM]
+    collective = collective_bytes / (chips * 50e9)     [ICI per link]
+
+cost_analysis() on the SPMD-partitioned module reports per-device FLOPs/bytes
+in current jax (the module is the per-device program); we therefore divide by
+one chip's peaks and report the dominant term + MODEL_FLOPS utilization.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["RooflineTerms", "roofline_from_compiled", "model_flops"]
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Perfect-overlap lower bound: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def compute_fraction(self) -> float:
+        """Fraction of roofline-limited time spent on the compute term —
+        1.0 means perfectly compute-bound (the ideal for training)."""
+        t = self.step_time_s
+        return self.compute_s / t if t > 0 else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops, "bytes": self.bytes_accessed,
+            "collective_bytes": self.collective_bytes, "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "step_time_s": self.step_time_s,
+        }
+
+
+def roofline_from_compiled(compiled, chips: int,
+                           hlo_text: str | None = None) -> RooflineTerms:
+    from repro.analysis.hlo import collective_bytes
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):   # older jax returns [dict]
+        ca = ca[0]
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    return RooflineTerms(
+        flops=float(ca.get("flops", 0.0)),
+        bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+        collective_bytes=float(collective_bytes(text)),
+        chips=chips,
+    )
+
+
+def model_flops(arch, cell) -> float:
+    """6*N*D (dense LM) / 6*N_active*D (MoE) and family-specific analogues.
+
+    These are *global* useful flops per step; divide by chips before
+    comparing to the per-device HLO flops.
+    """
+    fam = arch.family
+    m = arch.model
+    if fam == "lm":
+        tokens = cell.dims["batch"] * (cell.dims["seq"]
+                                       if cell.kind != "decode" else 1)
+        n = m.active_param_count() if m.moe else m.param_count()
+        mult = 6 if cell.kind == "train" else 2
+        return mult * n * tokens
+    if fam == "gnn":
+        d = m.d_hidden
+        if cell.name in ("molecule", "smoke_molecule"):
+            e = cell.dims["e"] * cell.dims["batch"]
+            n = cell.dims["n"] * cell.dims["batch"]
+        else:
+            e, n = cell.dims["e"], cell.dims["n"]
+        # message construction + aggregation + update, per layer
+        per_layer = 2 * e * d * 2 + 2 * n * d * d * 2
+        mult = 3 if cell.kind == "train" else 1
+        return mult * m.n_layers * per_layer
+    # recsys
+    b = cell.dims["batch"]
+    f = m.n_sparse + 1
+    per_ex = (f * m.embed_dim * m.d_attn * 2
+              + m.n_attn_layers * (3 * f * m.d_attn ** 2 * 2
+                                   + 2 * f * f * m.d_attn * 2
+                                   + f * m.d_attn ** 2 * 2)
+              + f * m.d_attn * 2)
+    total = b * per_ex
+    if cell.kind == "retrieval":
+        total += cell.dims["n_candidates"] * cell.dims["d_cand"] * 2 * b
+    mult = 3 if cell.kind == "train" else 1
+    return mult * total

@@ -1,0 +1,21 @@
+"""PGBSC core: color-coding tree subgraph counting via GraphBLAS kernels."""
+
+from repro.core.automorphism import tree_automorphisms
+from repro.core.colorsets import (all_colorsets, colorful_probability,
+                                  rank_colorset, split_tables,
+                                  unrank_colorset)
+from repro.core.engines import ENGINES, CountingEngine, build_engine
+from repro.core.oracle import (count_colorful_embeddings, count_embeddings,
+                               count_subgraphs_exact)
+from repro.core.templates import (STANDARD_TEMPLATES, ExecutionPlan, PlanNode,
+                                  TreeTemplate, get_template)
+
+__all__ = [
+    "tree_automorphisms",
+    "all_colorsets", "colorful_probability", "rank_colorset",
+    "split_tables", "unrank_colorset",
+    "ENGINES", "CountingEngine", "build_engine",
+    "count_colorful_embeddings", "count_embeddings", "count_subgraphs_exact",
+    "STANDARD_TEMPLATES", "ExecutionPlan", "PlanNode", "TreeTemplate",
+    "get_template",
+]

@@ -1,0 +1,250 @@
+"""The three counting engines: FASCIA, PFASCIA, PGBSC (paper §3-4).
+
+All three compute the same quantity — the number of colorful rooted
+embeddings of each sub-template, bottom-up over the execution plan — but with
+the paper's three performance regimes:
+
+* ``fascia``   Algorithm 1: vertex-centric; the neighbor sum of the passive
+               child is recomputed for every (color set, split) pair —
+               O(E * C(k,t) * C(t,t_p)) per sub-template. Row-major (N, C)
+               tables, padded-neighbor (ELL) traversal.
+* ``pfascia``  + pruning (§4.1-4.2): neighbor sums hoisted out and computed
+               once per distinct passive color set —
+               O(E * C(k,t_p) + V * C(k,t) * C(t,t_a)). Still row-major.
+* ``pgbsc``    + GraphBLAS (§4.3-4.5): combination-major (C, N) tables
+               (vertices on TPU lanes), SpMM = A_G x M_p batched over all
+               passive color sets, eMA fused multiply-add — optionally via
+               the Pallas TPU kernels.
+
+Exact arithmetic would make them identical (paper §7.4); floating-point
+reassociation yields ~1e-6 relative differences, which the tests bound.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import colorsets as cs
+from repro.core.templates import ExecutionPlan, TreeTemplate
+from repro.graph.structure import Graph
+from repro.kernels.ema import ops as ema_ops
+from repro.kernels.spmm import ops as spmm_ops
+
+__all__ = ["CountingEngine", "build_engine", "ENGINES"]
+
+ENGINES = ("fascia", "pfascia", "pgbsc")
+
+
+@dataclasses.dataclass
+class WorkEstimate:
+    """Static op counts per engine run (used by benchmarks / roofline)."""
+
+    spmm_flops: int = 0
+    ema_flops: int = 0
+    table_bytes: int = 0
+
+    @property
+    def total_flops(self) -> int:
+        return self.spmm_flops + self.ema_flops
+
+
+class CountingEngine:
+    """Counts colorful embeddings of a template for a given coloring.
+
+    Call :meth:`count_colorful` with an (n,) int32 coloring; returns the
+    scalar sum over the root table (= alpha x #colorful copies) and the root
+    table itself. :meth:`estimate` runs the full color-coding estimator.
+    """
+
+    def __init__(self, g: Graph, template: TreeTemplate, engine: str = "pgbsc",
+                 spmm_method: str = "segment", use_pallas_ema: bool = False,
+                 interpret: bool = True, dedup: bool = False,
+                 plan: str | None = None, dtype=jnp.float32):
+        if engine not in ENGINES:
+            raise ValueError(f"unknown engine {engine!r}")
+        self.g = g
+        self.template = template
+        self.engine = engine
+        self.k = template.k
+        self.dtype = dtype
+        plan_name = plan or ("dedup" if dedup else "plain")
+        self.plan: ExecutionPlan = {
+            "plain": template.plan, "dedup": template.plan_dedup,
+            "optimized": template.plan_optimized}[plan_name]
+        self.use_pallas_ema = use_pallas_ema
+        self.interpret = interpret
+
+        if engine == "pgbsc":
+            self._spmm_prep = spmm_ops.prepare(g, spmm_method,
+                                               interpret=interpret)
+        else:
+            nbr, mask = g.ell()
+            self._nbr = jnp.asarray(nbr)
+            self._mask = jnp.asarray(mask)
+
+        # Static split tables per internal plan node.
+        self._splits: dict[int, tuple[jnp.ndarray, jnp.ndarray]] = {}
+        for idx, node in enumerate(self.plan.nodes):
+            if node.is_leaf:
+                continue
+            t = node.size
+            t_a = self.plan.nodes[node.active].size
+            ia, ip = cs.split_tables(self.k, t, t_a)
+            self._splits[idx] = (jnp.asarray(ia), jnp.asarray(ip))
+
+        self.work = self._estimate_work()
+        self._count_fn = jax.jit(self._build())
+
+    # ------------------------------------------------------------------ api
+    def count_colorful(self, colors: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """-> (sum over root table, root table)."""
+        return self._count_fn(jnp.asarray(colors))
+
+    def estimate(self, n_iters: int, seed: int = 0,
+                 start_iteration: int = 0) -> dict:
+        """Color-coding estimate averaged over ``n_iters`` colorings."""
+        from repro.graph.coloring import iteration_key, random_coloring
+
+        alpha = self.template.automorphisms
+        p = cs.colorful_probability(self.k)
+        samples = []
+        for it in range(start_iteration, start_iteration + n_iters):
+            key = iteration_key(seed, it)
+            colors = random_coloring(key, self.g.n, self.k)
+            total, _ = self.count_colorful(colors)
+            samples.append(float(total) / (alpha * p))
+        arr = np.asarray(samples)
+        return {
+            "count": float(arr.mean()),
+            "std": float(arr.std(ddof=1)) if len(arr) > 1 else 0.0,
+            "samples": samples,
+            "n_iters": n_iters,
+            "alpha": alpha,
+            "colorful_probability": p,
+        }
+
+    # ------------------------------------------------------------- builders
+    def _build(self) -> Callable:
+        if self.engine == "pgbsc":
+            return self._build_pgbsc()
+        return self._build_rowmajor(pruned=self.engine == "pfascia")
+
+    def _leaf_table_cn(self, colors: jax.Array) -> jnp.ndarray:
+        """(k, N) one-hot of vertex colors — combination-major leaves."""
+        return (jnp.arange(self.k, dtype=colors.dtype)[:, None]
+                == colors[None, :]).astype(self.dtype)
+
+    def _build_pgbsc(self) -> Callable:
+        plan, splits, prep = self.plan, self._splits, self._spmm_prep
+
+        def run(colors: jax.Array):
+            leaf = self._leaf_table_cn(colors)
+            tables: list[jnp.ndarray | None] = [None] * plan.n_nodes
+            y_cache: dict[int, jnp.ndarray] = {}
+            for idx, node in enumerate(plan.nodes):
+                if node.is_leaf:
+                    tables[idx] = leaf
+                    continue
+                ia, ip = splits[idx]
+                # SpMM over *all* passive color sets at once (Algorithm 4 l.3);
+                # with plan dedup, shared passive children reuse the result.
+                if node.passive not in y_cache:
+                    y_cache[node.passive] = spmm_ops.spmm(
+                        tables[node.passive], prep
+                    )
+                y_p = y_cache[node.passive]
+                m_a = tables[node.active]
+                tables[idx] = ema_ops.ema(
+                    m_a, y_p, ia, ip,
+                    use_pallas=self.use_pallas_ema, interpret=self.interpret,
+                )
+            root = tables[-1]
+            return root.sum(), root
+
+        return run
+
+    def _build_rowmajor(self, pruned: bool) -> Callable:
+        """FASCIA / PFASCIA: row-major (N, C) tables + ELL traversal."""
+        plan, splits = self.plan, self._splits
+        nbr, mask = self._nbr, self._mask
+
+        def nbr_sum(m_cols: jnp.ndarray) -> jnp.ndarray:
+            # m_cols: (N, R) -> out[i, r] = sum_d m_cols[nbr[i, d], r] * mask
+            def body(acc, nd):
+                col_ids, msk = nd
+                return acc + m_cols[col_ids, :] * msk[:, None], None
+
+            acc0 = jnp.zeros_like(m_cols)
+            acc, _ = jax.lax.scan(body, acc0, (nbr.T, mask.T))
+            return acc
+
+        def run(colors: jax.Array):
+            leaf = self._leaf_table_cn(colors).T  # (N, k)
+            tables: list[jnp.ndarray | None] = [None] * plan.n_nodes
+            for idx, node in enumerate(plan.nodes):
+                if node.is_leaf:
+                    tables[idx] = leaf
+                    continue
+                ia, ip = splits[idx]
+                m_a, m_p = tables[node.active], tables[node.passive]
+                if pruned:
+                    # PFASCIA: one neighbor sweep per distinct passive set.
+                    y_p = nbr_sum(m_p)
+
+                    def body(acc, idx_l):
+                        ia_l, ip_l = idx_l
+                        return acc + m_a[:, ia_l] * y_p[:, ip_l], None
+
+                    acc0 = jnp.zeros((m_a.shape[0], ia.shape[0]), self.dtype)
+                    acc, _ = jax.lax.scan(body, acc0, (ia.T, ip.T))
+                    tables[idx] = acc
+                else:
+                    # FASCIA: the neighbor sweep is *inside* the split loop —
+                    # the redundancy of paper §3.1, preserved deliberately.
+                    def body(acc, idx_l):
+                        ia_l, ip_l = idx_l
+                        y_l = nbr_sum(m_p[:, ip_l])   # (N, S) sweep per split
+                        return acc + m_a[:, ia_l] * y_l, None
+
+                    acc0 = jnp.zeros((m_a.shape[0], ia.shape[0]), self.dtype)
+                    acc, _ = jax.lax.scan(body, acc0, (ia.T, ip.T))
+                    tables[idx] = acc
+            root = tables[-1]
+            return root.sum(), root
+
+        return run
+
+    # ------------------------------------------------------------- analysis
+    @property
+    def flops_per_iteration(self) -> int:
+        return self.work.total_flops
+
+    def _estimate_work(self) -> WorkEstimate:
+        from math import comb
+        w = WorkEstimate()
+        n, e, k = self.g.n, self.g.m, self.k
+        for idx, node in enumerate(self.plan.nodes):
+            if node.is_leaf:
+                continue
+            t = node.size
+            t_a = self.plan.nodes[node.active].size
+            t_p = t - t_a
+            n_sets, n_splits = comb(k, t), comb(t, t_a)
+            if self.engine == "fascia":
+                w.spmm_flops += e * n_sets * n_splits
+            else:
+                w.spmm_flops += e * comb(k, t_p)
+            w.ema_flops += 2 * n * n_sets * n_splits
+            w.table_bytes += 4 * n * n_sets
+        return w
+
+
+def build_engine(g: Graph, template: TreeTemplate, engine: str = "pgbsc",
+                 **kw) -> CountingEngine:
+    """Convenience constructor (see CountingEngine)."""
+    return CountingEngine(g, template, engine=engine, **kw)

@@ -1,0 +1,247 @@
+"""Tree templates and FASCIA-style partitioning (paper §2.1 phase 2).
+
+A template T (tree on k vertices) rooted at ``root`` is recursively cut at an
+edge adjacent to the current root: the *active* child keeps the root; the
+*passive* child is the subtree hanging off the cut edge. Leaves are single
+vertices. The resulting binary partition tree is evaluated bottom-up
+(post-order) by the dynamic program.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import cached_property
+
+import numpy as np
+
+__all__ = ["TreeTemplate", "PlanNode", "ExecutionPlan", "STANDARD_TEMPLATES",
+           "get_template"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanNode:
+    """One sub-template in the DP, identified by its vertex set.
+
+    ``active``/``passive`` are indices into ExecutionPlan.nodes (None = leaf).
+    ``size`` = number of template vertices in this sub-template.
+    """
+
+    vertices: tuple[int, ...]
+    root: int
+    active: int | None
+    passive: int | None
+
+    @property
+    def size(self) -> int:
+        return len(self.vertices)
+
+    @property
+    def is_leaf(self) -> bool:
+        return self.active is None
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Post-order list of sub-templates; the full template is ``nodes[-1]``."""
+
+    nodes: tuple[PlanNode, ...]
+    k: int
+
+    def __post_init__(self):
+        for i, nd in enumerate(self.nodes):
+            if not nd.is_leaf:
+                assert nd.active < i and nd.passive < i, "plan must be post-order"
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.nodes)
+
+    def table_widths(self, k: int | None = None):
+        from math import comb
+        k = k or self.k
+        return [comb(k, nd.size) for nd in self.nodes]
+
+
+class TreeTemplate:
+    """An unrooted tree on vertices 0..k-1 given by its edge list."""
+
+    def __init__(self, edges, root: int = 0, name: str = "t"):
+        self.edges = tuple(tuple(sorted(e)) for e in edges)
+        self.name = name
+        self.root = root
+        ks = {v for e in self.edges for v in e} | {root}
+        self.k = (max(ks) + 1) if ks else 1
+        if len(self.edges) != self.k - 1:
+            raise ValueError(f"not a tree: {self.k} vertices, {len(self.edges)} edges")
+        self._adj: dict[int, list[int]] = {v: [] for v in range(self.k)}
+        for u, v in self.edges:
+            self._adj[u].append(v)
+            self._adj[v].append(u)
+        # connectivity check
+        seen = {0}
+        stack = [0]
+        while stack:
+            v = stack.pop()
+            for u in self._adj[v]:
+                if u not in seen:
+                    seen.add(u)
+                    stack.append(u)
+        if len(seen) != self.k:
+            raise ValueError("template is not connected")
+
+    def adjacency(self, v: int) -> list[int]:
+        return self._adj[v]
+
+    def subtree_vertices(self, root: int, banned: int) -> tuple[int, ...]:
+        """Vertices reachable from ``root`` without passing through ``banned``."""
+        seen = {root}
+        stack = [root]
+        while stack:
+            v = stack.pop()
+            for u in self._adj[v]:
+                if u != banned and u not in seen:
+                    seen.add(u)
+                    stack.append(u)
+        return tuple(sorted(seen))
+
+    @cached_property
+    def plan(self) -> ExecutionPlan:
+        """FASCIA partitioning: cut the first adjacent edge of the root."""
+        return self._build_plan(dedup=False)
+
+    @cached_property
+    def plan_dedup(self) -> ExecutionPlan:
+        """Plan with isomorphic sub-templates shared (beyond-paper optimization).
+
+        Two sub-templates with the same *rooted canonical form* provably have
+        identical count tables (the DP result is independent of the partition
+        choice), so their tables — and the SpMM over their passive children —
+        can be computed once.
+        """
+        return self._build_plan(dedup=True)
+
+    @cached_property
+    def plan_optimized(self) -> ExecutionPlan:
+        """Work-optimal partitioning (beyond-paper): instead of FASCIA's
+        first-adjacent-edge cut, cut the edge whose passive subtree is
+        smallest. The SpMM term of a sub-template costs E * C(k, t_p), so
+        keeping t_p small (and the active chain long) minimizes traversal
+        work; combined with canonical-form dedup. See EXPERIMENTS.md §Perf.
+        """
+        return self._build_plan(dedup=True, optimize=True)
+
+    def _rooted_canon(self, vertices: tuple[int, ...], root: int) -> str:
+        vset = set(vertices)
+
+        def rec(v: int, parent: int) -> str:
+            subs = sorted(
+                rec(u, v) for u in self._adj[v] if u != parent and u in vset
+            )
+            return "(" + "".join(subs) + ")"
+
+        return rec(root, -1)
+
+    def _build_plan(self, dedup: bool, optimize: bool = False) -> ExecutionPlan:
+        nodes: list[PlanNode] = []
+        cache: dict = {}
+
+        def pick_cut(vset: set, root: int) -> int:
+            cands = [u for u in self._adj[root] if u in vset]
+            if not optimize:
+                return cands[0]
+            # smallest passive subtree minimizes E * C(k, t_p)
+            def psize(u):
+                return len([v for v in self.subtree_vertices(u, root)
+                            if v in vset])
+            return min(cands, key=psize)
+
+        def build(vertices: tuple[int, ...], root: int) -> int:
+            key = self._rooted_canon(vertices, root) if dedup else (vertices, root)
+            if key in cache:
+                return cache[key]
+            if len(vertices) == 1:
+                nodes.append(PlanNode(vertices, root, None, None))
+            else:
+                vset = set(vertices)
+                tau = pick_cut(vset, root)
+                passive_vs = tuple(
+                    v for v in self.subtree_vertices(tau, root) if v in vset
+                )
+                active_vs = tuple(v for v in vertices if v not in passive_vs)
+                ai = build(active_vs, root)
+                pi = build(passive_vs, tau)
+                nodes.append(PlanNode(vertices, root, ai, pi))
+            cache[key] = len(nodes) - 1
+            return cache[key]
+
+        build(tuple(range(self.k)), self.root)
+        return ExecutionPlan(tuple(nodes), self.k)
+
+    @property
+    def dedup_savings(self) -> tuple[int, int]:
+        """(nodes in plain plan, nodes in dedup plan)."""
+        return self.plan.n_nodes, self.plan_dedup.n_nodes
+
+    @cached_property
+    def automorphisms(self) -> int:
+        from repro.core.automorphism import tree_automorphisms
+        return tree_automorphisms(self.edges, self.k)
+
+    def to_arrays(self) -> np.ndarray:
+        return np.asarray(self.edges, dtype=np.int32)
+
+    def __repr__(self):
+        return f"TreeTemplate({self.name}, k={self.k})"
+
+
+def _path(k: int, name: str) -> TreeTemplate:
+    return TreeTemplate([(i, i + 1) for i in range(k - 1)], name=name)
+
+
+def _star(k: int, name: str) -> TreeTemplate:
+    return TreeTemplate([(0, i) for i in range(1, k)], name=name)
+
+
+def _caterpillar(spine: int, legs_at, k: int, name: str) -> TreeTemplate:
+    """Path of ``spine`` vertices with extra leaves attached at given spine ids."""
+    edges = [(i, i + 1) for i in range(spine - 1)]
+    nxt = spine
+    for s in legs_at:
+        edges.append((s, nxt))
+        nxt += 1
+    assert nxt == k, (nxt, k)
+    return TreeTemplate(edges, name=name)
+
+
+def _binary(k: int, name: str) -> TreeTemplate:
+    """Complete-ish binary tree on k vertices (heap numbering)."""
+    edges = [((i - 1) // 2, i) for i in range(1, k)]
+    return TreeTemplate(edges, name=name)
+
+
+# Templates follow the paper's u10..u17 naming (FASCIA's test templates are
+# paths/caterpillars/near-binary trees; exact shapes were "from the tests in
+# [32] or created by us", so we create representative ones of each size).
+STANDARD_TEMPLATES: dict[str, TreeTemplate] = {
+    "u3": _path(3, "u3"),
+    "u5": _caterpillar(3, [1, 1], 5, "u5"),
+    "u7": _binary(7, "u7"),
+    "u10": _caterpillar(6, [1, 2, 3, 4], 10, "u10"),
+    "u12": _caterpillar(7, [1, 2, 3, 4, 5], 12, "u12"),
+    "u13": _binary(13, "u13"),
+    "u14": _caterpillar(8, [1, 2, 3, 4, 5, 6], 14, "u14"),
+    "u15-1": _caterpillar(9, [1, 2, 3, 4, 5, 6], 15, "u15-1"),
+    "u15-2": _binary(15, "u15-2"),
+    "u16": _caterpillar(10, [1, 2, 3, 4, 5, 6], 16, "u16"),
+    "u17": _caterpillar(11, [1, 2, 3, 4, 5, 6], 17, "u17"),
+    "path5": _path(5, "path5"),
+    "star5": _star(5, "star5"),
+    "path4": _path(4, "path4"),
+    "star4": _star(4, "star4"),
+}
+
+
+def get_template(name: str) -> TreeTemplate:
+    if name not in STANDARD_TEMPLATES:
+        raise KeyError(f"unknown template {name!r}; have {sorted(STANDARD_TEMPLATES)}")
+    return STANDARD_TEMPLATES[name]

@@ -1,0 +1,120 @@
+"""Deterministic synthetic data pipelines.
+
+``make_batch(arch, cell_name, key)`` materializes a batch whose structure
+matches configs.shapes.input_specs — used by smoke tests, examples and the
+training driver. The LM stream is a reproducible zipf-ish token source; GNN
+batches are random regular-ish graphs (or batched molecules with positions);
+recsys batches are hashed ids + gaussian dense features.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import input_specs
+
+__all__ = ["make_batch", "statics_for", "lm_token_stream"]
+
+
+def lm_token_stream(key, batch: int, seq: int, vocab: int) -> jnp.ndarray:
+    """Zipf-flavored token ids (sorted uniform^3 concentrates mass)."""
+    u = jax.random.uniform(key, (batch, seq))
+    return jnp.clip((u ** 3 * vocab).astype(jnp.int32), 0, vocab - 1)
+
+
+def statics_for(arch: ArchConfig, cell_name: str) -> dict:
+    _, _, statics = input_specs(arch, cell_name)
+    return statics
+
+
+def make_batch(arch: ArchConfig, cell_name: str, key=None) -> dict:
+    key = key if key is not None else jax.random.PRNGKey(0)
+    specs, _, statics = input_specs(arch, cell_name)
+    cell = arch.cell(cell_name)
+    m = arch.model
+
+    if arch.family == "lm":
+        b, s = cell.dims["batch"], cell.dims["seq"]
+        if cell.kind == "train":
+            toks = lm_token_stream(key, b, s + 1, m.vocab_size)
+            return {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+        if cell.kind == "prefill":
+            return {"tokens": lm_token_stream(key, b, s, m.vocab_size)}
+        from repro.models.transformer import init_decode_cache
+        cache = init_decode_cache(m, b, s, dtype=m.param_dtype)
+        # pretend we've already decoded half the window
+        cache = dict(cache, len=jnp.asarray(s // 2, jnp.int32))
+        return {"token": lm_token_stream(key, b, 1, m.vocab_size),
+                "cache": cache}
+
+    if arch.family == "gnn":
+        return _gnn_batch(arch, cell, specs, statics, key)
+
+    # recsys
+    b = cell.dims["batch"]
+    ks = jax.random.split(key, 5)
+    batch = {
+        "sparse_ids": jax.random.randint(ks[0], (b, m.n_sparse), 0,
+                                         m.vocab_size, dtype=jnp.int32),
+        "bag_ids": jax.random.randint(ks[1], (b, m.bag_fields, m.bag_size),
+                                      -1, m.vocab_size, dtype=jnp.int32),
+        "dense": jax.random.normal(ks[2], (b, m.n_dense), jnp.float32),
+    }
+    if cell.kind == "train":
+        batch["labels"] = jax.random.bernoulli(ks[3], 0.3, (b,)
+                                               ).astype(jnp.float32)
+    if cell.kind == "retrieval":
+        nc, dc = cell.dims["n_candidates"], cell.dims["d_cand"]
+        n_fields = m.n_sparse + 1
+        batch["candidates"] = jax.random.normal(ks[3], (nc, dc), jnp.float32)
+        batch["retrieval_proj"] = jax.random.normal(
+            ks[4], (n_fields * m.d_attn, dc), jnp.float32) * 0.05
+    return batch
+
+
+def _gnn_batch(arch: ArchConfig, cell, specs, statics, key):
+    m = arch.model
+    d = cell.dims
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 1 << 30)))
+    if cell.name in ("molecule", "smoke_molecule"):
+        n_per, e_per, bs = d["n"], d["e"], d["batch"]
+        n, e = n_per * bs, e_per * bs
+        src = rng.integers(0, n_per, (bs, e_per)) + \
+            (np.arange(bs) * n_per)[:, None]
+        dst = rng.integers(0, n_per, (bs, e_per)) + \
+            (np.arange(bs) * n_per)[:, None]
+        edge_index = np.stack([src.ravel(), dst.ravel()]).astype(np.int32)
+        node_graph = np.repeat(np.arange(bs), n_per).astype(np.int32)
+        pooled, n_graphs = True, bs
+    else:
+        n, e = specs["edge_index"].shape[1], 0  # placeholder
+        n = specs[("positions" if m.kind == "nequip" else "x")].shape[0]
+        e = specs["edge_index"].shape[1]
+        edge_index = rng.integers(0, n, (2, e)).astype(np.int32)
+        node_graph = np.zeros(n, np.int32)
+        pooled, n_graphs = False, 1
+
+    batch = {"edge_index": jnp.asarray(edge_index),
+             "node_graph": jnp.asarray(node_graph)}
+    if m.kind == "nequip":
+        batch["positions"] = jnp.asarray(
+            rng.normal(size=(n, 3)).astype(np.float32) * 2.0)
+        batch["species"] = jnp.asarray(rng.integers(0, 8, n).astype(np.int32))
+        batch["labels"] = jnp.asarray(
+            rng.normal(size=(n_graphs,)).astype(np.float32))
+        return batch
+    batch["x"] = jnp.asarray(
+        rng.normal(size=(n, d["d_feat"])).astype(np.float32))
+    if pooled:
+        batch["labels"] = jnp.asarray(
+            rng.normal(size=(n_graphs,)).astype(np.float32))
+    else:
+        batch["labels"] = jnp.asarray(
+            rng.integers(0, m.n_classes, n).astype(np.int32))
+        mask = np.zeros(n, np.float32)
+        mask[: max(1, n // 4)] = 1.0
+        batch["label_mask"] = jnp.asarray(mask)
+    return batch

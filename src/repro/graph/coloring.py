@@ -1,0 +1,26 @@
+"""Random vertex coloring (color-coding phase 1)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["random_coloring", "iteration_key"]
+
+
+def random_coloring(key: jax.Array, n: int, k: int) -> jax.Array:
+    """Uniform color in [0, k) per vertex, int32 (n,)."""
+    return jax.random.randint(key, (n,), 0, k, dtype=jnp.int32)
+
+
+def iteration_key(seed: int, iteration: int) -> jax.Array:
+    """Deterministic per-iteration key: iterations are idempotent units of
+    work that any worker (pod) can execute — the basis of the fault-tolerance
+    story (see core/runner.py)."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), iteration)
+
+
+def coloring_numpy(seed: int, iteration: int, n: int, k: int) -> np.ndarray:
+    """Host-side mirror of random_coloring for oracle tests."""
+    return np.asarray(random_coloring(iteration_key(seed, iteration), n, k))

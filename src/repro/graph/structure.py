@@ -1,0 +1,274 @@
+"""Graph structures for PGBSC.
+
+The host-side canonical representation is CSR (numpy). Device-side formats are
+derived on demand:
+
+* ``edges``        — (src, dst) int32 arrays sorted by dst (segment-sum SpMM).
+* ``ell``          — padded neighbor lists (n, max_deg) for vertex-centric
+                     (FASCIA-style) engines.
+* ``edge_chunks``  — destination-tile-sorted fixed-size edge chunks for the
+                     Pallas gather SpMM kernel.
+* ``bsr``          — 128x128 dense-ified adjacency tiles (block-sparse rows)
+                     for the Pallas MXU SpMM kernel.
+
+All formats represent the *reverse* traversal used by the DP: for an undirected
+graph, A is symmetric and Y[:, i] = sum_{j in N(i)} M[:, j].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import cached_property
+
+import numpy as np
+
+__all__ = ["Graph", "EdgeChunks", "BsrMatrix"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeChunks:
+    """Fixed-size edge chunks grouped by (dst_tile, src_tile) pairs.
+
+    Every chunk touches exactly one (source tile, destination tile) pair of
+    ``tile`` vertices each; chunks are sorted by destination tile so an
+    accumulator output block stays resident across consecutive grid steps,
+    and the source tile id drives the BlockSpec window of the count matrix.
+    """
+
+    src: np.ndarray        # (n_chunks, chunk_size) int32, global src vertex id
+    dst_local: np.ndarray  # (n_chunks, chunk_size) int32, dst offset inside tile
+    mask: np.ndarray       # (n_chunks, chunk_size) float32 {0, 1}
+    src_tile: np.ndarray   # (n_chunks,) int32, source tile index
+    dst_tile: np.ndarray   # (n_chunks,) int32, destination tile index
+    tile: int
+    n_tiles: int
+
+    @property
+    def n_chunks(self) -> int:
+        return int(self.src.shape[0])
+
+    @property
+    def chunk_size(self) -> int:
+        return int(self.src.shape[1])
+
+
+@dataclasses.dataclass(frozen=True)
+class BsrMatrix:
+    """Block-sparse adjacency: dense ``tile x tile`` blocks for nonempty tiles.
+
+    ``blocks[b]`` is the dense sub-matrix A[src_tile*t:(src_tile+1)*t,
+    dst_tile*t:(dst_tile+1)*t]; the SpMM computes
+    ``Y[:, dst_block] += M[:, src_block] @ blocks[b]``. Blocks are sorted by
+    ``dst_tile`` so output blocks are revisited consecutively.
+    """
+
+    blocks: np.ndarray    # (n_blocks, tile, tile) float32
+    src_tile: np.ndarray  # (n_blocks,) int32
+    dst_tile: np.ndarray  # (n_blocks,) int32
+    tile: int
+    n_tiles: int
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self.blocks.shape[0])
+
+    @property
+    def density(self) -> float:
+        nnz = float(np.count_nonzero(self.blocks))
+        return nnz / max(1.0, self.blocks.size)
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Simple undirected graph in CSR form (host-side numpy).
+
+    ``indptr``/``indices`` follow scipy conventions. The graph is stored
+    symmetrized and deduplicated; self-loops are removed.
+    """
+
+    n: int
+    indptr: np.ndarray   # (n + 1,) int64
+    indices: np.ndarray  # (m,) int32  — column ids, sorted per row
+
+    # ------------------------------------------------------------- builders
+    @staticmethod
+    def from_edges(n: int, edges: np.ndarray) -> "Graph":
+        """Build from an (m, 2) array of (possibly directed/duplicated) edges."""
+        edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        if edges.size:
+            if edges.min() < 0 or edges.max() >= n:
+                raise ValueError("edge endpoint out of range")
+        # symmetrize, drop self loops, dedup
+        und = np.concatenate([edges, edges[:, ::-1]], axis=0)
+        und = und[und[:, 0] != und[:, 1]]
+        if und.size:
+            key = und[:, 0] * n + und[:, 1]
+            key = np.unique(key)
+            src = (key // n).astype(np.int64)
+            dst = (key % n).astype(np.int32)
+        else:
+            src = np.zeros((0,), np.int64)
+            dst = np.zeros((0,), np.int32)
+        indptr = np.zeros(n + 1, dtype=np.int64)
+        np.add.at(indptr, src + 1, 1)
+        np.cumsum(indptr, out=indptr)
+        return Graph(n=n, indptr=indptr, indices=dst)
+
+    @staticmethod
+    def from_adjacency(a: np.ndarray) -> "Graph":
+        a = np.asarray(a)
+        src, dst = np.nonzero(a)
+        return Graph.from_edges(a.shape[0], np.stack([src, dst], axis=1))
+
+    # ------------------------------------------------------------ properties
+    @property
+    def m(self) -> int:
+        """Number of directed edge slots (2x undirected edge count)."""
+        return int(self.indices.shape[0])
+
+    @cached_property
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.indptr).astype(np.int64)
+
+    @property
+    def max_degree(self) -> int:
+        return int(self.degrees.max()) if self.n else 0
+
+    @property
+    def avg_degree(self) -> float:
+        return float(self.m) / max(1, self.n)
+
+    def neighbors(self, v: int) -> np.ndarray:
+        return self.indices[self.indptr[v]:self.indptr[v + 1]]
+
+    def to_dense(self) -> np.ndarray:
+        a = np.zeros((self.n, self.n), dtype=np.float32)
+        src = np.repeat(np.arange(self.n), self.degrees)
+        a[src, self.indices] = 1.0
+        return a
+
+    # ------------------------------------------------------- device formats
+    @cached_property
+    def edges_by_dst(self) -> tuple[np.ndarray, np.ndarray]:
+        """(src, dst) int32 arrays; CSR is per-dst sorted already (symmetric).
+
+        Because the CSR rows are destination rows for the reverse traversal
+        (A symmetric), row i's entries are the sources contributing to dst i.
+        """
+        dst = np.repeat(np.arange(self.n, dtype=np.int32), self.degrees)
+        src = self.indices.astype(np.int32)
+        return src, dst
+
+    def ell(self, pad_value: int | None = None) -> tuple[np.ndarray, np.ndarray]:
+        """Padded neighbor table (n, max_deg) + float mask. pad_value defaults n-1."""
+        d = self.max_degree
+        pad = (self.n - 1) if pad_value is None else pad_value
+        nbr = np.full((self.n, max(d, 1)), pad, dtype=np.int32)
+        msk = np.zeros((self.n, max(d, 1)), dtype=np.float32)
+        for v in range(self.n):
+            lo, hi = self.indptr[v], self.indptr[v + 1]
+            nbr[v, : hi - lo] = self.indices[lo:hi]
+            msk[v, : hi - lo] = 1.0
+        return nbr, msk
+
+    def edge_chunks(self, tile: int = 128, chunk_size: int = 512) -> EdgeChunks:
+        """(dst_tile, src_tile)-grouped fixed-size edge chunks (gather SpMM)."""
+        src, dst = self.edges_by_dst
+        n_tiles = -(-self.n // tile)
+        stile = src // tile
+        dtile = dst // tile
+        key = dtile.astype(np.int64) * n_tiles + stile
+        order = np.argsort(key, kind="stable")
+        src, dst, key = src[order], dst[order], key[order]
+        uniq, starts = np.unique(key, return_index=True)
+        bounds = list(starts) + [len(key)]
+
+        chunk_src, chunk_dl, chunk_mask, chunk_st, chunk_dt = [], [], [], [], []
+        for i, kk in enumerate(uniq):
+            st = int(kk % n_tiles)
+            dt = int(kk // n_tiles)
+            s = src[bounds[i]: bounds[i + 1]]
+            d = dst[bounds[i]: bounds[i + 1]] - dt * tile
+            for off in range(0, len(s), chunk_size):
+                ss = s[off: off + chunk_size]
+                dd = d[off: off + chunk_size]
+                pad = chunk_size - len(ss)
+                # padding edges point at the chunk's own src tile, masked out
+                chunk_src.append(np.pad(ss, (0, pad), constant_values=st * tile))
+                chunk_dl.append(np.pad(dd, (0, pad)))
+                msk = np.zeros(chunk_size, np.float32)
+                msk[: len(ss)] = 1.0
+                chunk_mask.append(msk)
+                chunk_st.append(st)
+                chunk_dt.append(dt)
+        # Every dst tile needs >= 1 chunk so its output block is initialized.
+        present = set(chunk_dt)
+        for t in range(n_tiles):
+            if t not in present:
+                chunk_src.append(np.full(chunk_size, t * tile, np.int64))
+                chunk_dl.append(np.zeros(chunk_size, np.int64))
+                chunk_mask.append(np.zeros(chunk_size, np.float32))
+                chunk_st.append(t)
+                chunk_dt.append(t)
+        order2 = np.argsort(np.asarray(chunk_dt), kind="stable")
+        return EdgeChunks(
+            src=np.stack(chunk_src).astype(np.int32)[order2],
+            dst_local=np.stack(chunk_dl).astype(np.int32)[order2],
+            mask=np.stack(chunk_mask)[order2],
+            src_tile=np.asarray(chunk_st, dtype=np.int32)[order2],
+            dst_tile=np.asarray(chunk_dt, dtype=np.int32)[order2],
+            tile=tile,
+            n_tiles=n_tiles,
+        )
+
+    def bsr(self, tile: int = 128) -> BsrMatrix:
+        """Dense-ified tile blocks, sorted by destination tile.
+
+        Block b holds A[src_tile, dst_tile] densified;
+        Y[:, dst] += M[:, src] @ block. Efficient after RCM reordering
+        concentrates nonzeros near the diagonal.
+        """
+        src, dst = self.edges_by_dst
+        n_tiles = -(-self.n // tile)
+        stile = src // tile
+        dtile = dst // tile
+        key = dtile.astype(np.int64) * n_tiles + stile
+        order = np.argsort(key, kind="stable")
+        src, dst, key = src[order], dst[order], key[order]
+        uniq, starts = np.unique(key, return_index=True)
+        starts = list(starts) + [len(key)]
+        blocks, s_tiles, d_tiles = [], [], []
+        for i, k in enumerate(uniq):
+            st = int(k % n_tiles)
+            dt = int(k // n_tiles)
+            blk = np.zeros((tile, tile), dtype=np.float32)
+            sl = slice(starts[i], starts[i + 1])
+            blk[src[sl] - st * tile, dst[sl] - dt * tile] = 1.0
+            blocks.append(blk)
+            s_tiles.append(st)
+            d_tiles.append(dt)
+        # Every dst tile needs >= 1 block so its output block is initialized.
+        present = set(d_tiles)
+        for t in range(n_tiles):
+            if t not in present:
+                blocks.append(np.zeros((tile, tile), np.float32))
+                s_tiles.append(t)
+                d_tiles.append(t)
+        order = np.argsort(np.asarray(d_tiles), kind="stable")
+        return BsrMatrix(
+            blocks=np.stack(blocks)[order],
+            src_tile=np.asarray(s_tiles, np.int32)[order],
+            dst_tile=np.asarray(d_tiles, np.int32)[order],
+            tile=tile,
+            n_tiles=n_tiles,
+        )
+
+    def padded(self, multiple: int) -> "Graph":
+        """Pad vertex count up to a multiple (isolated padding vertices)."""
+        n_pad = -(-self.n // multiple) * multiple
+        if n_pad == self.n:
+            return self
+        indptr = np.concatenate(
+            [self.indptr, np.full(n_pad - self.n, self.indptr[-1], np.int64)]
+        )
+        return Graph(n=n_pad, indptr=indptr, indices=self.indices)

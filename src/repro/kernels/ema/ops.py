@@ -1,0 +1,48 @@
+"""Jitted eMA dispatch: XLA scan path + Pallas kernel path.
+
+The XLA path scans over the L splits; each step is two row-gathers plus a
+fused multiply-add over the full (S, N) tile — the direct JAX transcription of
+paper Algorithm 4 line 7. The Pallas path keeps child tables resident in VMEM
+(see pallas_ema.py) and is selected when they fit.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ema.pallas_ema import ema_pallas
+
+__all__ = ["ema", "ema_xla", "ema_flops"]
+
+# VMEM budget for the Pallas path: both child tables + out block.
+_PALLAS_VMEM_BYTES = 12 * 2 ** 20
+_PALLAS_N_BLOCK = 512
+
+
+def ema_xla(m_a: jnp.ndarray, y_p: jnp.ndarray,
+            ia: jnp.ndarray, ip: jnp.ndarray) -> jnp.ndarray:
+    def body(acc, idx):
+        ia_l, ip_l = idx
+        return acc + m_a[ia_l, :] * y_p[ip_l, :], None
+
+    acc0 = jnp.zeros((ia.shape[0], m_a.shape[1]), m_a.dtype)
+    acc, _ = jax.lax.scan(body, acc0, (ia.T, ip.T))
+    return acc
+
+
+def ema(m_a: jnp.ndarray, y_p: jnp.ndarray, ia: jnp.ndarray, ip: jnp.ndarray,
+        *, use_pallas: bool = False, interpret: bool = True) -> jnp.ndarray:
+    if use_pallas and _fits_vmem(m_a, y_p):
+        return ema_pallas(m_a, y_p, ia, ip, interpret=interpret)
+    return ema_xla(m_a, y_p, ia, ip)
+
+
+def _fits_vmem(m_a, y_p) -> bool:
+    resident = (m_a.shape[0] + y_p.shape[0]) * _PALLAS_N_BLOCK * 4
+    return resident < _PALLAS_VMEM_BYTES
+
+
+def ema_flops(n: int, s: int, l: int) -> int:
+    """2 flops (mul + add) per (vertex, color set, split)."""
+    return 2 * n * s * l

@@ -1,0 +1,93 @@
+"""Pallas TPU eMA kernel (paper §4.5 Algorithm 4 line 7).
+
+Layout (C, N): color combinations on sublanes, vertices on lanes. The static
+split tables IA/IP select rows of the resident child tables; each step is a
+vector FMA over a block of vertex lanes:
+
+    out[j, v_blk] = sum_l m_a[IA[j, l], v_blk] * y_p[IP[j, l], v_blk]
+
+Grid: (s_blocks, n_blocks). The child tables keep their full combination
+dimension resident in VMEM and are blocked over vertices only — valid for
+k <= ~13 (C(13,6) * 512 lanes * 4 B ≈ 3.5 MB per table); larger templates fall
+back to the XLA path in ops.py. Row gathers are sublane-dynamic indexing,
+which Mosaic lowers to vector loads with a dynamic base — cheap relative to
+the lane-dynamic gathers the naive layout would need (that asymmetry is the
+whole point of the paper's column-major layout, transposed to TPU lanes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ema_pallas"]
+
+
+def _kernel(ia_ref, ip_ref, ma_ref, yp_ref, out_ref, *, s_block: int, l: int):
+    sb = pl.program_id(0)
+    n_blk = out_ref.shape[1]
+
+    def s_body(s, _):
+        def l_body(j, row):
+            ia = ia_ref[sb * s_block + s, j]
+            ip = ip_ref[sb * s_block + s, j]
+            a_row = ma_ref[pl.dslice(ia, 1), :]   # (1, N_BLK)
+            p_row = yp_ref[pl.dslice(ip, 1), :]   # (1, N_BLK)
+            return row + a_row * p_row
+
+        row = jax.lax.fori_loop(0, l, l_body, jnp.zeros((1, n_blk), jnp.float32))
+        out_ref[pl.dslice(s, 1), :] = row
+        return 0
+
+    jax.lax.fori_loop(0, s_block, s_body, 0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("s_block", "n_block", "interpret")
+)
+def ema_pallas(
+    m_a: jnp.ndarray,   # (Ca, N) f32
+    y_p: jnp.ndarray,   # (Cp, N) f32
+    ia: jnp.ndarray,    # (S, L) int32
+    ip: jnp.ndarray,    # (S, L) int32
+    *,
+    s_block: int = 8,
+    n_block: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    s, l = ia.shape
+    n = m_a.shape[1]
+    assert y_p.shape[1] == n
+    s_pad = -(-s // s_block) * s_block
+    n_pad = -(-n // n_block) * n_block
+    if s_pad != s:
+        # pad split tables with index 0 references; sliced away afterwards
+        ia = jnp.pad(ia, ((0, s_pad - s), (0, 0)))
+        ip = jnp.pad(ip, ((0, s_pad - s), (0, 0)))
+    if n_pad != n:
+        m_a = jnp.pad(m_a, ((0, 0), (0, n_pad - n)))
+        y_p = jnp.pad(y_p, ((0, 0), (0, n_pad - n)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(s_pad // s_block, n_pad // n_block),
+        in_specs=[
+            pl.BlockSpec((m_a.shape[0], n_block), lambda sb, nb, IA, IP: (0, nb)),
+            pl.BlockSpec((y_p.shape[0], n_block), lambda sb, nb, IA, IP: (0, nb)),
+        ],
+        out_specs=pl.BlockSpec((s_block, n_block), lambda sb, nb, IA, IP: (sb, nb)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, s_block=s_block, l=l),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s_pad, n_pad), jnp.float32),
+        interpret=interpret,
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+    )(ia, ip, m_a, y_p)
+    return out[:s, :n]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the eMA (element-wise multiply-add) kernel.
+
+Given child tables in (C, N) layout and static split tables IA/IP of shape
+(S, L) (S output color sets, L splits each):
+
+    out[j, v] = sum_l  m_a[IA[j, l], v] * y_p[IP[j, l], v]
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["ema_ref"]
+
+
+def ema_ref(m_a: jnp.ndarray, y_p: jnp.ndarray,
+            ia: jnp.ndarray, ip: jnp.ndarray) -> jnp.ndarray:
+    # (S, L, N) gathers — memory-heavy but unambiguous; oracle only.
+    ga = m_a[ia, :]          # (S, L, N)
+    gp = y_p[ip, :]          # (S, L, N)
+    return (ga * gp).sum(axis=1)

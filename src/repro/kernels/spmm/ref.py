@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the PGBSC SpMM.
+
+Count tables use the (C, N) "combination-major" layout (paper §4.3 column-major
+adapted to TPU: vertices ride the 128-wide lane dimension).
+
+SpMM semantics (undirected G, A symmetric):
+    Y[r, i] = sum_{j in N(i)} M[r, j]        i.e.  Y = M @ A
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["spmm_dense", "spmm_segment_ref"]
+
+
+def spmm_dense(m: jnp.ndarray, a_dense: jnp.ndarray) -> jnp.ndarray:
+    """Oracle via dense matmul: (C, N) @ (N, N) -> (C, N)."""
+    return m @ a_dense.astype(m.dtype)
+
+
+def spmm_segment_ref(m: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray,
+                     n: int) -> jnp.ndarray:
+    """Oracle via one big segment-sum over edges (no chunking)."""
+    import jax
+    contrib = m[:, src]                       # (C, E)
+    out = jax.ops.segment_sum(contrib.T, dst, num_segments=n)  # (N, C)
+    return out.T

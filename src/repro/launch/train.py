@@ -1,0 +1,78 @@
+"""Training launcher: --arch <id> [--cell <cell>] on whatever devices exist.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+        --reduced --steps 20 --ckpt /tmp/ck
+
+On real hardware the mesh is derived from jax.devices(); on this CPU
+container use --reduced (tiny config) or the dry-run for the full sizes.
+Checkpoints/resume via train.checkpoint; data from data.synthetic.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_config, reduced_config
+from repro.data.synthetic import make_batch, statics_for
+from repro.optim.optimizer import AdamWConfig
+from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+from repro.train.step import build_train_step, concrete_train_state
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    arch = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    cell_name = args.cell or next(
+        c.name for c in arch.cells if c.kind == "train")
+    cell = arch.cell(cell_name)
+    d_in = cell.dims.get("d_feat")
+    statics = statics_for(arch, cell_name)
+
+    state = concrete_train_state(arch, jax.random.PRNGKey(args.seed),
+                                 d_in=d_in)
+    n_params = sum(x.size for x in
+                   jax.tree_util.tree_leaves(state["params"]))
+    print(f"arch={arch.arch_id} cell={cell_name} params={n_params / 1e6:.2f}M "
+          f"devices={len(jax.devices())}")
+
+    start = 0
+    if args.ckpt:
+        restored, extras = restore_checkpoint(args.ckpt, state)
+        if restored is not None:
+            state, start = restored, extras["step"]
+            print(f"resumed from step {start}")
+
+    step_fn = jax.jit(build_train_step(
+        arch, AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                          total_steps=args.steps), statics=statics))
+
+    t0 = time.time()
+    for it in range(start, args.steps):
+        batch = make_batch(arch, cell_name,
+                           jax.random.fold_in(jax.random.PRNGKey(7), it))
+        state, metrics = step_fn(state, batch)
+        if it % max(args.steps // 10, 1) == 0 or it == args.steps - 1:
+            print(f"step {it:5d} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+        if args.ckpt and (it + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt, it + 1, state,
+                            extras={"step": it + 1})
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,205 @@
+"""GNN architectures: GraphSAGE, PNA, GatedGCN (+ NequIP in equivariant.py).
+
+Message passing is built on ``jax.ops.segment_sum/max`` over an (2, E)
+edge_index — the JAX-native scatter/gather substrate (no sparse library).
+Inputs come in a uniform GraphBatch dict:
+
+    x           (N, F) node features
+    edge_index  (2, E) int32 [src; dst]
+    edge_attr   (E, Fe) or None
+    node_graph  (N,) graph id for batched small graphs (else zeros)
+    n_graphs    static int
+    labels      (N,) int32 node labels or (n_graphs,) regression targets
+
+All models expose init(key, cfg, d_in) -> params and
+apply(params, cfg, batch) -> node/graph outputs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["segment_mean", "segment_std", "init_gnn", "gnn_forward",
+           "gnn_loss"]
+
+
+# ------------------------------------------------------------ segment utils
+def segment_mean(data, segment_ids, num_segments):
+    s = jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+    c = jax.ops.segment_sum(jnp.ones_like(data[..., :1]), segment_ids,
+                            num_segments=num_segments)
+    return s / jnp.maximum(c, 1.0)
+
+
+def segment_std(data, segment_ids, num_segments, eps=1e-5):
+    mean = segment_mean(data, segment_ids, num_segments)
+    sq = segment_mean(data * data, segment_ids, num_segments)
+    return jnp.sqrt(jnp.maximum(sq - mean * mean, 0.0) + eps)
+
+
+def _dense(key, d_in, d_out, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w": (jax.random.normal(k1, (d_in, d_out)) * d_in ** -0.5).astype(dtype),
+        "b": jnp.zeros((d_out,), dtype),
+    }
+
+
+def _apply_dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+# ----------------------------------------------------------------- GraphSAGE
+def _init_sage_layer(key, d_in, d_out, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"self": _dense(k1, d_in, d_out, dtype),
+            "nbr": _dense(k2, d_in, d_out, dtype)}
+
+
+def _sage_layer(p, x, edge_index, n):
+    src, dst = edge_index
+    agg = segment_mean(x[src], dst, n)
+    h = _apply_dense(p["self"], x) + _apply_dense(p["nbr"], agg)
+    h = jax.nn.relu(h)
+    # L2 normalize (GraphSAGE §3.1)
+    return h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6)
+
+
+# ----------------------------------------------------------------------- PNA
+_PNA_DEGREE_EPS = 1.0
+
+
+def _init_pna_layer(key, d_in, d_out, dtype):
+    # 4 aggregators x 3 scalers = 12 concatenated views + self
+    k1, k2 = jax.random.split(key)
+    return {"pre": _dense(k1, 2 * d_in, d_in, dtype),
+            "post": _dense(k2, 13 * d_in, d_out, dtype)}
+
+
+def _pna_layer(p, x, edge_index, n, mean_log_deg):
+    src, dst = edge_index
+    msg = jax.nn.relu(_apply_dense(
+        p["pre"], jnp.concatenate([x[src], x[dst]], axis=-1)))
+    deg = jax.ops.segment_sum(jnp.ones((src.shape[0], 1)), dst,
+                              num_segments=n)
+    mean = segment_mean(msg, dst, n)
+    mx = jax.ops.segment_max(msg, dst, num_segments=n)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    mn = -jax.ops.segment_max(-msg, dst, num_segments=n)
+    mn = jnp.where(jnp.isfinite(mn), mn, 0.0)
+    std = segment_std(msg, dst, n)
+    aggs = [mean, mx, mn, std]
+    logd = jnp.log(deg + _PNA_DEGREE_EPS)
+    amp = logd / mean_log_deg
+    att = jnp.where(logd > 0, mean_log_deg / jnp.maximum(logd, 1e-6), 0.0)
+    views = []
+    for a in aggs:
+        views.extend([a, a * amp, a * att])
+    h = jnp.concatenate([x] + views, axis=-1)
+    return jax.nn.relu(_apply_dense(p["post"], h))
+
+
+# ------------------------------------------------------------------ GatedGCN
+def _init_gated_layer(key, d, dtype):
+    ks = jax.random.split(key, 5)
+    return {c: _dense(k, d, d, dtype) for c, k in zip("UVABC", ks)} | {
+        "ln_h": {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)},
+        "ln_e": {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)},
+    }
+
+
+def _layer_norm(p, x, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]
+
+
+def _gated_layer(p, x, e, edge_index, n):
+    src, dst = edge_index
+    e_new = _apply_dense(p["A"], x)[src] + _apply_dense(p["B"], x)[dst] + \
+        _apply_dense(p["C"], e)
+    gate = jax.nn.sigmoid(e_new)
+    num = jax.ops.segment_sum(gate * _apply_dense(p["V"], x)[src], dst,
+                              num_segments=n)
+    den = jax.ops.segment_sum(gate, dst, num_segments=n)
+    h_new = _apply_dense(p["U"], x) + num / (den + 1e-6)
+    x = x + jax.nn.relu(_layer_norm(p["ln_h"], h_new))
+    e = e + jax.nn.relu(_layer_norm(p["ln_e"], e_new))
+    return x, e
+
+
+# ------------------------------------------------------------------- models
+def init_gnn(key, cfg, d_in: int) -> dict:
+    """cfg: GNNConfig (kind in graphsage|pna|gatedgcn)."""
+    dt = cfg.param_dtype
+    d = cfg.d_hidden
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    p = {"embed": _dense(keys[-1], d_in, d, dt),
+         "out": _dense(keys[-2], d, cfg.n_classes, dt)}
+    if cfg.kind == "graphsage":
+        p["layers"] = [_init_sage_layer(keys[i], d, d, dt)
+                       for i in range(cfg.n_layers)]
+    elif cfg.kind == "pna":
+        p["layers"] = [_init_pna_layer(keys[i], d, d, dt)
+                       for i in range(cfg.n_layers)]
+    elif cfg.kind == "gatedgcn":
+        p["layers"] = [_init_gated_layer(keys[i], d, dt)
+                       for i in range(cfg.n_layers)]
+        p["edge_embed"] = _dense(keys[-3], d_in, d, dt)
+    else:
+        raise ValueError(cfg.kind)
+    return p
+
+
+def gnn_forward(params: dict, cfg, batch: dict) -> jnp.ndarray:
+    """-> (N, n_classes) node logits, or (n_graphs, n_classes) if pooling.
+
+    Note: per-layer remat was tried for the 60M-edge cells and REFUTED —
+    XLA:CPU's remat raised peak memory ~1.3x and the step bound ~1.4x
+    (EXPERIMENTS.md §Perf iteration 6b); layers stay un-checkpointed."""
+    x = batch["x"].astype(cfg.param_dtype)
+    edge_index = batch["edge_index"]
+    n = x.shape[0]
+    h = jax.nn.relu(_apply_dense(params["embed"], x))
+
+    if cfg.kind == "graphsage":
+        for lp in params["layers"]:
+            h = _sage_layer(lp, h, edge_index, n)
+    elif cfg.kind == "pna":
+        src, dst = edge_index
+        deg = jax.ops.segment_sum(jnp.ones((src.shape[0], 1)), dst,
+                                  num_segments=n)
+        mean_log_deg = jnp.log(deg + _PNA_DEGREE_EPS).mean()
+        for lp in params["layers"]:
+            h = _pna_layer(lp, h, edge_index, n, mean_log_deg)
+    elif cfg.kind == "gatedgcn":
+        src, dst = edge_index
+        if batch.get("edge_attr") is not None:
+            ea = batch["edge_attr"].astype(cfg.param_dtype)
+            d_in = params["edge_embed"]["w"].shape[0]
+            if ea.shape[-1] < d_in:
+                ea = jnp.pad(ea, ((0, 0), (0, d_in - ea.shape[-1])))
+            e = _apply_dense(params["edge_embed"], ea[:, :d_in])
+        else:
+            e = h[src] + h[dst]
+        for lp in params["layers"]:
+            h, e = _gated_layer(lp, h, e, edge_index, n)
+
+    if batch.get("pool", False):
+        h = segment_mean(h, batch["node_graph"], batch["n_graphs"])
+    return _apply_dense(params["out"], h)
+
+
+def gnn_loss(params, cfg, batch) -> jnp.ndarray:
+    logits = gnn_forward(params, cfg, batch)
+    if batch.get("pool", False):
+        # graph-level regression (molecule cells)
+        target = batch["labels"].astype(logits.dtype)
+        return jnp.mean((logits[:, 0] - target) ** 2)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)[:, 0]
+    mask = batch.get("label_mask")
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

@@ -1,0 +1,331 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (full / blocked
+flash-style / sliding-window / decode-with-cache), SwiGLU MLP.
+
+Pure-function style: params are nested dicts of arrays; every init_* takes an
+rng key and returns the param subtree. Attention math accumulates in f32
+regardless of param dtype.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm", "init_rms_norm", "rope", "init_attention", "attention",
+    "decode_attention", "init_mlp", "mlp_swiglu",
+]
+
+_NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------- norms
+def init_rms_norm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------- rope
+def _rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32)
+                            / d_head))
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: float = 10_000.0) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = _rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- attention
+def init_attention(key, d_model: int, n_heads: int, n_kv: int, d_head: int,
+                   dtype, use_qk_norm: bool = False) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    p = {
+        "wq": (jax.random.normal(kq, (d_model, n_heads, d_head)) * s).astype(dtype),
+        "wk": (jax.random.normal(kk, (d_model, n_kv, d_head)) * s).astype(dtype),
+        "wv": (jax.random.normal(kv, (d_model, n_kv, d_head)) * s).astype(dtype),
+        "wo": (jax.random.normal(ko, (n_heads, d_head, d_model)) * s).astype(dtype),
+    }
+    if use_qk_norm:
+        p["q_norm"] = init_rms_norm(d_head, dtype)
+        p["k_norm"] = init_rms_norm(d_head, dtype)
+    return p
+
+
+def _qkv(params, x, positions, theta, use_qk_norm):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if use_qk_norm:
+        q = rms_norm(params["q_norm"], q)
+        k = rms_norm(params["k_norm"], k)
+    q = rope(q, positions, theta)
+    k = rope(k, positions, theta)
+    return q, k, v
+
+
+def _expand_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(B, S, Hkv, D) -> (B, S, Hkv*groups, D) by repetition (GQA)."""
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def _mask_ok(qpos, kpos, window: int | None, is_global):
+    """Boolean keep-mask: causal, optionally windowed. ``is_global`` is a
+    traced scalar (>0.5 disables the window) so a scanned layer stack can mix
+    local/global layers without duplicating compute (gemma3 5:1)."""
+    ok = kpos <= qpos
+    if window is not None:
+        in_window = kpos > qpos - window
+        if is_global is None:
+            ok = ok & in_window
+        else:
+            ok = ok & (in_window | (is_global > 0.5))
+    return ok
+
+
+def attention(params: dict, x: jnp.ndarray, *, n_heads: int, n_kv: int,
+              d_head: int, theta: float = 10_000.0,
+              window: int | None = None, is_global=None,
+              use_qk_norm: bool = False,
+              q_chunk: int = 1024, kv_chunk: int = 1024,
+              unroll_chunks: bool = False) -> jnp.ndarray:
+    """Causal self-attention over (B, S, D); blocked online-softmax when S is
+    large (flash-attention reference in pure jnp, memory O(chunk^2)).
+
+    ``unroll_chunks`` replaces the chunk scans with python loops over S/4
+    blocks — HLO-visible flops for the dry-run cost analysis (XLA's
+    HloCostAnalysis counts while bodies once)."""
+    b, s, d = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _qkv(params, x, positions, theta, use_qk_norm)
+    groups = n_heads // n_kv
+    k = _expand_kv(k, groups)
+    v = _expand_kv(v, groups)
+    scale = d_head ** -0.5
+
+    if s <= max(q_chunk, kv_chunk) and not unroll_chunks:
+        logits = jnp.einsum("bqhk,bshk->bhqs", q, k).astype(jnp.float32)
+        qpos = jnp.arange(s)[:, None]
+        kpos = jnp.arange(s)[None, :]
+        ok = _mask_ok(qpos, kpos, window, is_global)
+        logits = logits * scale + jnp.where(ok, 0.0, _NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhqs,bshk->bqhk", probs, v)
+    elif unroll_chunks:
+        c = min(max(s // 4, 128), s)
+        out = _unrolled_attention(q, k, v, scale, window, is_global, c)
+    else:
+        out = _blocked_attention(q, k, v, scale, window, is_global,
+                                 q_chunk, kv_chunk)
+    return jnp.einsum("bqhk,hkd->bqd", out, params["wo"])
+
+
+def _unrolled_attention(q, k, v, scale, window, is_global, chunk):
+    """Python-loop flash blocks (static trip counts; dry-run cost analysis)."""
+    b, s, h, dh = q.shape
+    assert s % chunk == 0, (s, chunk)
+    nb = s // chunk
+    outs = []
+    for qi in range(nb):
+        q_blk = q[:, qi * chunk:(qi + 1) * chunk]
+        m = jnp.full((b, h, chunk), _NEG_INF, jnp.float32)
+        l = jnp.zeros((b, h, chunk), jnp.float32)
+        acc = jnp.zeros((b, h, chunk, dh), jnp.float32)
+        for ki in range(qi + 1):           # causal: skip upper blocks
+            k_blk = k[:, ki * chunk:(ki + 1) * chunk]
+            v_blk = v[:, ki * chunk:(ki + 1) * chunk]
+            logits = jnp.einsum("bqhk,bshk->bhqs", q_blk, k_blk
+                                ).astype(jnp.float32) * scale
+            qpos = qi * chunk + jnp.arange(chunk)[:, None]
+            kpos = ki * chunk + jnp.arange(chunk)[None, :]
+            ok = _mask_ok(qpos, kpos, window, is_global)
+            logits = logits + jnp.where(ok, 0.0, _NEG_INF)[None, None]
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqs,bshk->bhqk", p, v_blk.astype(jnp.float32))
+            m = m_new
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        outs.append(jnp.moveaxis(out, 1, 2))
+    return jnp.concatenate(outs, axis=1).astype(v.dtype)
+
+
+def _blocked_attention(q, k, v, scale, window, is_global, q_chunk, kv_chunk):
+    """Online-softmax two-level blocking; causal (+ optional window)."""
+    b, s, h, dh = q.shape
+    nq = -(-s // q_chunk)
+    q_pad = nq * q_chunk
+    if q_pad != s:
+        q = jnp.pad(q, ((0, 0), (0, q_pad - s), (0, 0), (0, 0)))
+    nk = -(-s // kv_chunk)
+    kv_pad = nk * kv_chunk
+    if kv_pad != s:
+        k = jnp.pad(k, ((0, 0), (0, kv_pad - s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kv_pad - s), (0, 0), (0, 0)))
+
+    kq = k.reshape(b, nk, kv_chunk, h, dh)
+    vq = v.reshape(b, nk, kv_chunk, h, dh)
+
+    def q_block(qi, q_blk):
+        q_off = qi * q_chunk
+
+        def kv_block(carry, inputs):
+            m, l, acc = carry
+            ki, k_blk, v_blk = inputs
+            k_off = ki * kv_chunk
+            logits = jnp.einsum("bqhk,bshk->bhqs", q_blk, k_blk)
+            logits = logits.astype(jnp.float32) * scale
+            qpos = q_off + jnp.arange(q_chunk)[:, None]
+            kpos = k_off + jnp.arange(kv_chunk)[None, :]
+            ok = _mask_ok(qpos, kpos, window, is_global) & (kpos < s)
+            logits = logits + jnp.where(ok, 0.0, _NEG_INF)[None, None]
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqs,bshk->bhqk", p, v_blk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, q_chunk), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, h, q_chunk, dh), jnp.float32)
+        ks = jnp.arange(nk)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0),
+            (ks, jnp.moveaxis(kq, 1, 0), jnp.moveaxis(vq, 1, 0)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(out, 1, 2)  # (b, q_chunk, h, dh)
+
+    qs = q.reshape(b, nq, q_chunk, h, dh)
+    out = jax.lax.map(lambda args: q_block(*args),
+                      (jnp.arange(nq), jnp.moveaxis(qs, 1, 0)))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, q_pad, h, dh)[:, :s]
+    return out.astype(v.dtype)
+
+
+def _constrain(x, sharding):
+    if sharding is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sharding)
+
+
+def decode_attention(params: dict, x: jnp.ndarray, cache_k, cache_v,
+                     cache_len, *, n_heads: int, n_kv: int, d_head: int,
+                     theta: float = 10_000.0, window: int | None = None,
+                     is_global=None, use_qk_norm: bool = False,
+                     shard_hints: dict | None = None):
+    """One-token decode. x: (B, 1, D); cache_[kv]: (B, S_max, Hkv, D).
+
+    Returns (out (B,1,D), new_cache_k, new_cache_v). Softmax over the cache
+    sequence axis in f32; positions masked beyond cache_len.
+
+    ``shard_hints`` ({"cache": NamedSharding, "logits": NamedSharding},
+    optional) pins the attention math to sequence-sharding (flash-decoding):
+    without them XLA reconciles the head-sharded q against the seq-sharded
+    cache by all-gathering the entire cache per layer (EXPERIMENTS.md §Perf
+    iteration 2).
+    """
+    hints = shard_hints or {}
+    b, one, d = x.shape
+    s_max = cache_k.shape[1]
+    positions = jnp.full((b, 1), cache_len, dtype=jnp.int32)
+    q, k_new, v_new = _qkv(params, x, positions, theta, use_qk_norm)
+
+    # size-1 dynamic_update_slice partitions cleanly on a sequence-sharded
+    # cache when S rides a single mesh axis (configs/shapes.py picks it)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k_new.astype(cache_k.dtype), cache_len, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v_new.astype(cache_v.dtype), cache_len, axis=1)
+    cache_k = _constrain(cache_k, hints.get("cache"))
+    cache_v = _constrain(cache_v, hints.get("cache"))
+
+    # GQA-native: group the query heads instead of materializing the
+    # repeated KV (a 4x llama3 cache blow-up per layer; §Perf iteration 2c)
+    groups = n_heads // n_kv
+    qg = q.reshape(b, 1, n_kv, groups, d_head)
+    logits = jnp.einsum("bqhgk,bshk->bhgqs", qg, cache_k
+                        ).astype(jnp.float32)
+    logits = _constrain(logits * d_head ** -0.5, hints.get("logits"))
+    kpos = jnp.arange(s_max)[None, None, None, None, :]
+    ok = _mask_ok(cache_len, kpos, window, is_global)
+    logits = jnp.where(ok, logits, _NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(cache_v.dtype)
+    out = jnp.einsum("bhgqs,bshk->bqhgk", probs, cache_v)
+    out = out.reshape(b, 1, n_heads, d_head)
+    out = jnp.einsum("bqhk,hkd->bqd", out, params["wo"])
+    return out, cache_k, cache_v
+
+
+def prefill_attention(params: dict, x: jnp.ndarray, cache_k, cache_v,
+                      c0: int, *, n_heads: int, n_kv: int, d_head: int,
+                      theta: float = 10_000.0, window: int | None = None,
+                      is_global=None, use_qk_norm: bool = False):
+    """Chunked-prefill attention: x is the prompt chunk at static offset c0;
+    writes the chunk's K/V into the cache (static-offset update) and attends
+    causally over cache[:, :c0+chunk]. Returns (out, cache_k, cache_v)."""
+    b, cs, d = x.shape
+    positions = (c0 + jnp.arange(cs))[None, :]
+    q, k_new, v_new = _qkv(params, x, positions, theta, use_qk_norm)
+
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k_new.astype(cache_k.dtype), c0, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v_new.astype(cache_v.dtype), c0, axis=1)
+
+    prefix = c0 + cs
+    kk = jax.lax.slice_in_dim(cache_k, 0, prefix, axis=1)
+    vv = jax.lax.slice_in_dim(cache_v, 0, prefix, axis=1)
+    groups = n_heads // n_kv
+    qg = q.reshape(b, cs, n_kv, groups, d_head)
+    logits = jnp.einsum("bqhgk,bshk->bhgqs", qg, kk).astype(jnp.float32)
+    logits *= d_head ** -0.5
+    qpos = (c0 + jnp.arange(cs))[:, None]
+    kpos = jnp.arange(prefix)[None, :]
+    ok = _mask_ok(qpos, kpos, window, is_global)
+    logits = logits + jnp.where(ok, 0.0, _NEG_INF)[None, None, None]
+    probs = jax.nn.softmax(logits, axis=-1).astype(vv.dtype)
+    out = jnp.einsum("bhgqs,bshk->bqhgk", probs, vv)
+    out = out.reshape(b, cs, n_heads, d_head)
+    out = jnp.einsum("bqhk,hkd->bqd", out, params["wo"])
+    return out, cache_k, cache_v
+
+
+# ----------------------------------------------------------------------- mlp
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = d_model ** -0.5, d_ff ** -0.5
+    return {
+        "w_gate": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d_model)) * s_out).astype(dtype),
+    }
+
+
+def mlp_swiglu(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    gate = jax.nn.silu(x @ params["w_gate"])
+    return (gate * (x @ params["w_up"])) @ params["w_down"]

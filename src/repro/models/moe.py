@@ -1,0 +1,134 @@
+"""Mixture-of-Experts FFN with GShard-style grouped capacity dispatch.
+
+Tokens are split into ``groups`` (= the data-parallel shard count at scale) so
+the dispatch buffer is (G, E, C_g, D): G rides the data axis, experts ride the
+model axis, and the expert einsum parallelizes over BOTH mesh axes with no
+communication — an ungrouped (E, C, D) buffer drops the data axis and
+replicates expert compute across it (16x flops at mesh 16x16; EXPERIMENTS.md
+§Perf iteration 3). Per-group capacity C_g = ceil(cf * T_g * K / E) matches
+GShard semantics: overflowing tokens are dropped per group (the residual
+stream carries them).
+
+Positions within an expert queue use a log-depth associative scan — a plain
+cumsum lowers to an O(n^2) reduce-window on some backends (§Perf iteration 1).
+
+Aux load-balancing loss follows Switch Transformer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_mlp, mlp_swiglu
+
+__all__ = ["init_moe", "moe_ffn"]
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, n_shared: int,
+             dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (d_model, n_experts)) * s
+                   ).astype(jnp.float32),
+        # stacked expert weights: (E, d, ff) / (E, ff, d)
+        "w_gate": (jax.random.normal(ks[1], (n_experts, d_model, d_ff)) * s
+                   ).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (n_experts, d_model, d_ff)) * s
+                 ).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (n_experts, d_ff, d_model))
+                   * d_ff ** -0.5).astype(dtype),
+    }
+    if n_shared:
+        p["shared"] = init_mlp(key, d_model, d_ff * n_shared, dtype)
+    return p
+
+
+def _pick_groups(requested: int, n_tokens: int) -> int:
+    """Largest divisor of n_tokens that is <= requested."""
+    g = max(1, min(requested, n_tokens))
+    while n_tokens % g:
+        g -= 1
+    return g
+
+
+def moe_ffn(params: dict, x: jnp.ndarray, *, top_k: int,
+            capacity_factor: float = 1.25,
+            groups: int = 1) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out, aux_loss)."""
+    b, s, d = x.shape
+    e = params["router"].shape[1]
+    n_tokens = b * s
+    g = _pick_groups(groups, n_tokens)
+    t_g = n_tokens // g
+    xg = x.reshape(g, t_g, d)
+
+    logits = (xg.astype(jnp.float32) @ params["router"])     # (G, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)        # (G, Tg, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    capacity = max(1, int(capacity_factor * t_g * top_k / e))
+
+    # Per-group position of each (token, k) in its expert queue, computed by
+    # sorting slot->expert ids and enumerating within runs: O(Tg*K) memory.
+    # (History: a (Tg*K, E) one-hot scan was E-times bigger and its cumsum
+    # lowered to an O(n^2) reduce-window — §Perf iterations 1 and 7.)
+    ids = gate_idx.reshape(g, t_g * top_k)                   # (G, S)
+    order = jnp.argsort(ids, axis=1, stable=True)
+    sorted_ids = jnp.take_along_axis(ids, order, axis=1)
+    iota = jnp.broadcast_to(jnp.arange(t_g * top_k), ids.shape)
+    is_start = jnp.concatenate(
+        [jnp.ones((g, 1), bool), sorted_ids[:, 1:] != sorted_ids[:, :-1]],
+        axis=1)
+    run_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(is_start, iota, 0), axis=1)
+    pos_sorted = iota - run_start
+    inv = jnp.argsort(order, axis=1)
+    pos = jnp.take_along_axis(pos_sorted, inv, axis=1
+                              ).reshape(g, t_g, top_k)       # (G, Tg, K)
+    keep = pos < capacity
+
+    # dispatch: scatter tokens into (G, E*C, D) buffers (local per group)
+    expert_slot = gate_idx * capacity + jnp.minimum(pos, capacity - 1)
+    expert_slot = jnp.where(keep, expert_slot, e * capacity)  # overflow bin
+    xk = jnp.broadcast_to(xg[:, :, None, :], (g, t_g, top_k, d))
+
+    def scatter_group(xk_g, slot_g):
+        return jax.ops.segment_sum(
+            xk_g.reshape(-1, d), slot_g.reshape(-1),
+            num_segments=e * capacity + 1)[:-1]
+
+    buf = jax.vmap(scatter_group)(xk, expert_slot)           # (G, E*C, D)
+    buf = buf.reshape(g, e, capacity, d).astype(x.dtype)
+
+    # expert compute: parallel over G (data) x E (model)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, params["w_gate"]))
+    h = h * jnp.einsum("gecd,edf->gecf", buf, params["w_up"])
+    y = jnp.einsum("gecf,efd->gecd", h, params["w_down"])    # (G, E, C, D)
+
+    # combine: gather each (token, k) slot's output, weight by gate
+    y_flat = y.reshape(g, e * capacity, d)
+    slot = jnp.where(keep, gate_idx * capacity + pos, 0)
+
+    def gather_group(y_g, slot_g):
+        return y_g[slot_g.reshape(-1)].reshape(t_g, top_k, d)
+
+    gathered = jax.vmap(gather_group)(y_flat, slot)          # (G, Tg, K, D)
+    gathered = jnp.where(keep[..., None], gathered, 0.0)
+    out = (gathered * gate_vals[..., None].astype(gathered.dtype)).sum(2)
+    out = out.reshape(b, s, d)
+
+    if "shared" in params:
+        out = out + mlp_swiglu(params["shared"], x.reshape(n_tokens, d)
+                               ).reshape(b, s, d)
+
+    # Switch-style load-balance aux loss (global over groups)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(gate_idx[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    mean_probs = probs.mean(axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * mean_probs)
+
+    return out, aux

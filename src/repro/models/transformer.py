@@ -1,0 +1,324 @@
+"""Decoder-only transformer LM covering all five assigned LM architectures.
+
+Features: GQA + RoPE, optional sliding-window local attention with every-Nth
+global layer (gemma3 5:1), optional QK-norm (qwen3), optional MoE FFN with
+shared experts (deepseek/qwen3) and leading dense layers (deepseek),
+scan-over-layers with optional remat (compile-time and memory control at 8B+
+scale), KV-cache decode.
+
+Layer params are stacked along a leading (n_layers,) axis so the layer stack
+is a single `lax.scan` — the HLO stays O(1) in depth, which keeps the 40-cell
+x 2-mesh dry-run tractable.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models import layers as L
+from repro.models.moe import init_moe, moe_ffn
+
+__all__ = ["init_lm", "lm_forward", "lm_loss", "init_decode_cache",
+           "lm_decode_step", "lm_prefill"]
+
+
+def _layer_is_global(cfg: LMConfig, idx: int) -> bool:
+    if cfg.sliding_window is None:
+        return True
+    if cfg.global_every <= 0:
+        return False
+    return (idx + 1) % cfg.global_every == 0
+
+
+def init_lm(key, cfg: LMConfig) -> dict:
+    dt = cfg.param_dtype
+    keys = jax.random.split(key, cfg.n_layers + 3)
+
+    def layer_params(k, moe_layer: bool):
+        ka, kf = jax.random.split(k)
+        p = {
+            "attn": L.init_attention(ka, cfg.d_model, cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.head_dim, dt,
+                                     cfg.use_qk_norm),
+            "ln1": L.init_rms_norm(cfg.d_model, dt),
+            "ln2": L.init_rms_norm(cfg.d_model, dt),
+        }
+        if moe_layer:
+            p["moe"] = init_moe(kf, cfg.d_model, cfg.d_ff,
+                                cfg.moe.n_experts, cfg.moe.n_shared, dt)
+        else:
+            d_ff = cfg.dense_d_ff or cfg.d_ff
+            p["mlp"] = L.init_mlp(kf, cfg.d_model, d_ff, dt)
+        return p
+
+    n_dense = cfg.first_dense_layers if cfg.moe else cfg.n_layers
+    n_scan = cfg.n_layers - (cfg.first_dense_layers if cfg.moe else 0)
+    moe_scan = cfg.moe is not None
+
+    # stacked params for the scanned (homogeneous) layers
+    stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs),
+        *[layer_params(keys[i], moe_scan) for i in range(n_scan)],
+    ) if n_scan else {}
+    dense_front = [layer_params(keys[n_scan + i], False)
+                   for i in range(cfg.first_dense_layers if cfg.moe else 0)]
+
+    emb_scale = cfg.d_model ** -0.5
+    return {
+        "embed": (jax.random.normal(keys[-3], (cfg.vocab_size, cfg.d_model))
+                  * emb_scale).astype(dt),
+        "lm_head": (jax.random.normal(keys[-2], (cfg.d_model, cfg.vocab_size))
+                    * emb_scale).astype(dt),
+        "ln_f": L.init_rms_norm(cfg.d_model, dt),
+        "layers": stacked,
+        "dense_front": dense_front,
+    }
+
+
+def _window_flags(cfg: LMConfig, n: int) -> jnp.ndarray:
+    """Per-scanned-layer flag: 1.0 = global attention, 0.0 = windowed."""
+    offset = cfg.first_dense_layers if cfg.moe else 0
+    return jnp.asarray(
+        [1.0 if _layer_is_global(cfg, offset + i) else 0.0 for i in range(n)],
+        jnp.float32)
+
+
+def _block(cfg: LMConfig, p: dict, x: jnp.ndarray, is_global) -> tuple:
+    """One transformer block; returns (x, aux_loss). The local/global mix
+    (gemma3) is a traced per-layer flag folded into the attention mask."""
+    h = L.attention(
+        p["attn"], L.rms_norm(p["ln1"], x, cfg.norm_eps),
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.head_dim,
+        theta=cfg.rope_theta, window=cfg.sliding_window, is_global=is_global,
+        use_qk_norm=cfg.use_qk_norm, unroll_chunks=cfg.attn_unroll)
+    x = x + h
+    hn = L.rms_norm(p["ln2"], x, cfg.norm_eps)
+    if "moe" in p:
+        f, aux = moe_ffn(p["moe"], hn, top_k=cfg.moe.top_k,
+                         capacity_factor=cfg.moe.capacity_factor,
+                         groups=cfg.moe.groups)
+    else:
+        f, aux = L.mlp_swiglu(p["mlp"], hn), jnp.zeros((), jnp.float32)
+    return x + f, aux
+
+
+def lm_forward(params: dict, cfg: LMConfig,
+               tokens: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens (B, S) -> (logits (B, S, V) f32, aux_loss)."""
+    x = params["embed"][tokens]
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for p in params["dense_front"]:
+        x, aux = _block(cfg, p, x, jnp.float32(1.0))
+        aux_total += aux
+
+    if params["layers"]:
+        n_scan = jax.tree_util.tree_leaves(params["layers"])[0].shape[0]
+        flags = _window_flags(cfg, n_scan)
+        fn = jax.checkpoint(_block, static_argnums=(0,)) if cfg.remat \
+            else _block
+
+        if cfg.scan_layers:
+            def body(carry, inputs):
+                x, aux_acc = carry
+                layer_p, flag = inputs
+                x, aux = fn(cfg, layer_p, x, flag)
+                return (x, aux_acc + aux), None
+
+            (x, aux_total), _ = jax.lax.scan(
+                body, (x, aux_total), (params["layers"], flags))
+        else:
+            # unrolled (dry-run cost analysis: while bodies count once)
+            for i in range(n_scan):
+                layer_p = jax.tree_util.tree_map(lambda a: a[i],
+                                                 params["layers"])
+                x, aux = fn(cfg, layer_p, x, flags[i])
+                aux_total += aux
+
+    x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    return logits, aux_total
+
+
+def lm_loss(params: dict, cfg: LMConfig, tokens: jnp.ndarray,
+            targets: jnp.ndarray, aux_weight: float = 0.01) -> jnp.ndarray:
+    """Cross-entropy written as reductions over the vocab axis (logsumexp +
+    one-hot contraction) so a vocab-sharded lm_head never all-gathers the
+    (B, S, V) logits — the sharded-friendly CE of Megatron/MaxText."""
+    logits, aux = lm_forward(params, cfg, tokens)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    tgt_logit = jnp.sum(logits * onehot, axis=-1)
+    nll = lse - tgt_logit
+    return nll.mean() + aux_weight * aux
+
+
+# ------------------------------------------------------------------ serving
+def init_decode_cache(cfg: LMConfig, batch: int, s_max: int,
+                      dtype=jnp.bfloat16) -> dict:
+    """Layer-stacked KV cache (n_scan, B, S_max, Hkv, Dh).
+
+    Note: scan homogeneity keeps a full-length cache for gemma3's windowed
+    layers too; the window-trimmed variant (6x cache saving at 500k) is a
+    recorded §Perf optimization — see train/serve_step window_cache option.
+    """
+    n_scan = cfg.n_layers - (cfg.first_dense_layers if cfg.moe else 0)
+    front = cfg.first_dense_layers if cfg.moe else 0
+    shape = (n_scan, batch, s_max, cfg.n_kv_heads, cfg.head_dim)
+    fshape = (front, batch, s_max, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+        "k_front": jnp.zeros(fshape, dtype), "v_front": jnp.zeros(fshape, dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def lm_decode_step(params: dict, cfg: LMConfig, cache: dict,
+                   token: jnp.ndarray,
+                   shard_hints: dict | None = None
+                   ) -> tuple[jnp.ndarray, dict]:
+    """token (B, 1) int32 -> (logits (B, 1, V), new cache).
+
+    shard_hints (optional): {"cache", "logits"} NamedShardings pinning
+    decode attention to sequence-sharding (see layers.decode_attention).
+    """
+    x = params["embed"][token]
+    cache_len = cache["len"]
+
+    for i, p in enumerate(params["dense_front"]):
+        h, ck, cv = L.decode_attention(
+            p["attn"], L.rms_norm(p["ln1"], x, cfg.norm_eps),
+            cache["k_front"][i], cache["v_front"][i], cache_len,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.head_dim,
+            theta=cfg.rope_theta, use_qk_norm=cfg.use_qk_norm,
+            shard_hints=shard_hints)
+        cache["k_front"] = cache["k_front"].at[i].set(ck)
+        cache["v_front"] = cache["v_front"].at[i].set(cv)
+        x = x + h
+        hn = L.rms_norm(p["ln2"], x, cfg.norm_eps)
+        x = x + L.mlp_swiglu(p["mlp"], hn)
+
+    if params["layers"]:
+        n_scan = jax.tree_util.tree_leaves(params["layers"])[0].shape[0]
+        flags = _window_flags(cfg, n_scan)
+
+        def body(x, inputs):
+            layer_p, flag, ck, cv = inputs
+            hn = L.rms_norm(layer_p["ln1"], x, cfg.norm_eps)
+            h, ck_new, cv_new = L.decode_attention(
+                layer_p["attn"], hn, ck, cv, cache_len,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                d_head=cfg.head_dim, theta=cfg.rope_theta,
+                window=cfg.sliding_window, is_global=flag,
+                use_qk_norm=cfg.use_qk_norm, shard_hints=shard_hints)
+            x = x + h
+            hn2 = L.rms_norm(layer_p["ln2"], x, cfg.norm_eps)
+            if "moe" in layer_p:
+                f, _ = moe_ffn(layer_p["moe"], hn2, top_k=cfg.moe.top_k,
+                               capacity_factor=cfg.moe.capacity_factor,
+                               groups=cfg.moe.groups)
+            else:
+                f = L.mlp_swiglu(layer_p["mlp"], hn2)
+            return x + f, (ck_new, cv_new)
+
+        if cfg.scan_layers:
+            x, (k_all, v_all) = jax.lax.scan(
+                body, x, (params["layers"], flags, cache["k"], cache["v"]))
+        else:
+            ks, vs = [], []
+            for i in range(n_scan):
+                layer_p = jax.tree_util.tree_map(lambda a: a[i],
+                                                 params["layers"])
+                x, (ck, cv) = body(
+                    x, (layer_p, flags[i], cache["k"][i], cache["v"][i]))
+                ks.append(ck)
+                vs.append(cv)
+            k_all, v_all = jnp.stack(ks), jnp.stack(vs)
+        cache = dict(cache, k=k_all, v=v_all)
+
+    x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    cache = dict(cache, len=cache_len + 1)
+    return logits, cache
+
+
+def lm_prefill(params: dict, cfg: LMConfig,
+               tokens: jnp.ndarray) -> jnp.ndarray:
+    """Prefill forward (logits only; cache fill elided — the dry-run cost is
+    the quadratic attention itself)."""
+    logits, _ = lm_forward(params, cfg, tokens)
+    return logits
+
+
+def lm_prefill_chunked(params: dict, cfg: LMConfig, tokens: jnp.ndarray,
+                       cache: dict, chunk: int = 1024
+                       ) -> tuple[jnp.ndarray, dict]:
+    """Chunked prefill (Sarathi-style): processes the prompt in sequence
+    chunks, filling the KV cache as it goes — peak attention memory is
+    O(chunk x prefix) instead of O(S^2), and the filled cache hands off
+    directly to lm_decode_step. Returns (last-chunk logits, cache).
+
+    MoE/dense-front handled like lm_forward; gemma3's local/global layer
+    pattern flows through the same flag-masked attention.
+    """
+    b, s = tokens.shape
+    assert s % chunk == 0, (s, chunk)
+    n_scan = (jax.tree_util.tree_leaves(params["layers"])[0].shape[0]
+              if params["layers"] else 0)
+    flags = _window_flags(cfg, n_scan)
+
+    for c0 in range(0, s, chunk):
+        x = params["embed"][tokens[:, c0:c0 + chunk]]
+        # (dense-front layers, if any, processed like scanned ones)
+        front_caches = []
+        for i, p in enumerate(params["dense_front"]):
+            x, ck, cv = _prefill_block(
+                cfg, p, x, cache["k_front"][i], cache["v_front"][i], c0,
+                jnp.float32(1.0))
+            front_caches.append((ck, cv))
+        if front_caches:
+            cache = dict(
+                cache,
+                k_front=jnp.stack([c[0] for c in front_caches]),
+                v_front=jnp.stack([c[1] for c in front_caches]))
+
+        if params["layers"]:
+            def body(x, inputs):
+                layer_p, flag, ck, cv = inputs
+                x, ck2, cv2 = _prefill_block(cfg, layer_p, x, ck, cv, c0,
+                                             flag)
+                return x, (ck2, cv2)
+
+            x, (k_all, v_all) = jax.lax.scan(
+                body, x, (params["layers"], flags, cache["k"], cache["v"]))
+            cache = dict(cache, k=k_all, v=v_all)
+
+    x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    cache = dict(cache, len=jnp.asarray(s, jnp.int32))
+    return logits, cache
+
+
+def _prefill_block(cfg, p, x, cache_k, cache_v, c0: int, flag):
+    """One block over a prompt chunk starting at static offset c0; writes
+    the chunk's K/V into the cache and attends to the whole prefix."""
+    b, cs, _ = x.shape
+    hn = L.rms_norm(p["ln1"], x, cfg.norm_eps)
+    h, ck, cv = L.prefill_attention(
+        p["attn"], hn, cache_k, cache_v, c0,
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.head_dim,
+        theta=cfg.rope_theta, window=cfg.sliding_window, is_global=flag,
+        use_qk_norm=cfg.use_qk_norm)
+    x = x + h
+    hn2 = L.rms_norm(p["ln2"], x, cfg.norm_eps)
+    if "moe" in p:
+        f, _ = moe_ffn(p["moe"], hn2, top_k=cfg.moe.top_k,
+                       capacity_factor=cfg.moe.capacity_factor,
+                       groups=cfg.moe.groups)
+    else:
+        f = L.mlp_swiglu(p["mlp"], hn2)
+    return x + f, ck, cv

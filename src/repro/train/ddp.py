@@ -1,0 +1,82 @@
+"""Explicit data-parallel (DDP) training step via shard_map, with optional
+int8 error-feedback gradient compression.
+
+The pjit path (train/step.py) lets XLA place the gradient all-reduce; this
+builder makes it explicit so the all-reduce payload can be compressed 4x
+(optim/optimizer.compressed_psum) — the bandwidth lever for collective-bound
+data-parallel training on slow interconnects. Params are replicated; batches
+shard over the data axis; the compression residual is part of the train
+state (error feedback keeps the long-run update unbiased).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.optim.optimizer import (AdamWConfig, adamw_update, compressed_psum,
+                                   init_adamw)
+from repro.train.step import loss_fn_for
+
+__all__ = ["build_ddp_step", "init_ddp_state"]
+
+
+def init_ddp_state(params) -> dict:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"params": params, "opt": init_adamw(params), "residual": zeros}
+
+
+def build_ddp_step(arch: ArchConfig, mesh: Mesh,
+                   opt_cfg: AdamWConfig | None = None,
+                   statics: dict | None = None,
+                   compress: bool = True, axis: str = "data"):
+    """Returns step(state, batch) -> (state, metrics); call under jit.
+
+    batch arrays shard over ``axis`` on their leading dim; state replicates.
+    """
+    opt_cfg = opt_cfg or AdamWConfig()
+    loss_fn = loss_fn_for(arch)
+    statics = statics or {}
+    n_shards = mesh.shape[axis]
+
+    def local_step(state, batch):
+        params = state["params"]
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, {**batch, **statics}))(params)
+        if compress:
+            grads, residual = compressed_psum(grads, axis,
+                                              state["residual"])
+            grads = jax.tree_util.tree_map(lambda g: g / n_shards, grads)
+        else:
+            grads = jax.lax.pmean(grads, axis)
+            residual = state["residual"]
+        loss = jax.lax.pmean(loss, axis)
+        new_params, new_opt, metrics = adamw_update(
+            opt_cfg, params, grads, state["opt"])
+        metrics = dict(metrics, loss=loss)
+        return {"params": new_params, "opt": new_opt,
+                "residual": residual}, metrics
+
+    state_spec = jax.tree_util.tree_map(lambda _: P(), {"x": 0})  # template
+    del state_spec
+
+    def batch_specs(batch):
+        return jax.tree_util.tree_map(
+            lambda x: P(axis) if getattr(x, "ndim", 0) >= 1 else P(), batch)
+
+    def step(state, batch):
+        state_specs = jax.tree_util.tree_map(lambda _: P(), state)
+        bspecs = batch_specs(batch)
+        fn = shard_map(
+            local_step, mesh=mesh,
+            in_specs=(state_specs, bspecs),
+            out_specs=(state_specs,
+                       {"grad_norm": P(), "lr": P(), "loss": P()}),
+            check_rep=False)
+        return fn(state, batch)
+
+    return step

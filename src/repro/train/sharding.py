@@ -1,0 +1,178 @@
+"""Sharding rules: map param/batch pytrees to PartitionSpecs per family.
+
+Conventions (DESIGN.md §4):
+  data axis  — batch / vertices / tokens / edges ("dp" + "pod" for multi-pod)
+  model axis — heads / ffn / experts / vocab / color-combinations ("tp"/"ep")
+
+Rules are path-keyed: the most specific suffix match wins. Anything unmatched
+is replicated.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["lm_param_specs", "gnn_param_specs", "recsys_param_specs",
+           "batch_specs", "spec_to_sharding", "opt_state_specs",
+           "DATA_AXES"]
+
+DATA_AXES = ("pod", "data")  # batch shards over both on a multi-pod mesh
+
+
+def _data(mesh: Mesh):
+    return tuple(a for a in DATA_AXES if a in mesh.axis_names) or None
+
+
+def lm_param_specs(params, mesh: Mesh):
+    """Megatron-style TP: attention heads and FFN width over `model`;
+    experts over `model` (EP); embeddings vocab-sharded over `model`.
+
+    Dims that don't divide the model-axis size fall back (heads -> head_dim
+    -> replicated): e.g. smollm's 15 heads or gemma3's 4 heads can't split 16
+    ways, but their 64/256-wide head_dim can.
+    """
+    dm = mesh.shape["model"]
+
+    def shardable(n: int) -> bool:
+        return n % dm == 0
+
+    def attn_spec(r: int, h: int, dh: int, trailing_d: bool):
+        # layouts: (.., D, H, Dh) for wq/wk/wv; (.., H, Dh, D) for wo
+        if trailing_d:
+            if shardable(h):
+                return P(*([None] * (r - 3) + ["model", None, None]))
+            if shardable(dh):
+                return P(*([None] * (r - 3) + [None, "model", None]))
+            return P(*([None] * r))
+        if shardable(h):
+            return P(*([None] * (r - 2) + ["model", None]))
+        if shardable(dh):
+            return P(*([None] * (r - 1) + ["model"]))
+        return P(*([None] * r))
+
+    def rule(path: str, x):
+        r = len(x.shape)
+        if "q_norm" in path or "k_norm" in path:
+            return P(*([None] * r))
+        if "embed" in path and "species" not in path:  # (V, D)
+            return P("model", None)
+        if "lm_head" in path:                     # (D, V)
+            return P(None, "model")
+        if "wq" in path or "wk" in path or "wv" in path:
+            return attn_spec(r, x.shape[-2], x.shape[-1], False)
+        if "wo" in path:                          # (.., H, Dh, D)
+            return attn_spec(r, x.shape[-3], x.shape[-2], True)
+        if "moe" in path and "shared" not in path and \
+                ("w_gate" in path or "w_up" in path or "w_down" in path):
+            # (L, E, d, f) — experts over model
+            return P(*([None] * (r - 3) + ["model", None, None]))
+        if "router" in path:
+            return P(*([None] * r))
+        if "w_gate" in path or "w_up" in path:    # dense mlp (.., D, F)
+            if shardable(x.shape[-1]):
+                return P(*([None] * (r - 1) + ["model"]))
+            return P(*([None] * r))
+        if "w_down" in path:                      # (.., F, D)
+            if shardable(x.shape[-2]):
+                return P(*([None] * (r - 2) + ["model", None]))
+            return P(*([None] * r))
+        return P(*([None] * r))
+
+    return _by_path(params, rule)
+
+
+def gnn_param_specs(params, mesh: Mesh):
+    dm = mesh.shape["model"]
+
+    def rule(path: str, x):
+        r = len(x.shape)
+        if r == 2:
+            if x.shape[-1] >= 64 and x.shape[-1] % dm == 0:
+                return P(None, "model")           # wide layers over model
+            if x.shape[0] >= 64 and x.shape[0] % dm == 0:
+                return P("model", None)
+        return P(*([None] * r))
+
+    return _by_path(params, rule)
+
+
+def recsys_param_specs(params, mesh: Mesh):
+    def rule(path: str, x):
+        r = len(x.shape)
+        if "tables" in path:                      # (F, V, D): vocab-sharded
+            return P(None, "model", None)
+        return P(*([None] * r))
+
+    return _by_path(params, rule)
+
+
+def batch_specs(batch, mesh: Mesh, *, data_dims: dict | None = None):
+    """Shard the leading dim of every batch array over the data axes,
+    unless listed in data_dims with an explicit spec."""
+    d = _data(mesh)
+
+    def rule(path, x):
+        if data_dims and path in data_dims:
+            return data_dims[path]
+        r = len(x.shape)
+        if r == 0:
+            return P()
+        return P(*((d,) + (None,) * (r - 1)))
+
+    return _by_path(batch, rule)
+
+
+def opt_state_specs(param_specs, param_shapes=None, mesh: Mesh | None = None):
+    """ZeRO-1: optimizer moments additionally shard over the data axes.
+
+    fp32 Adam moments are 4x the bf16 params; sharding them only like the
+    params leaves ~15 GiB/chip for the 30B MoE (EXPERIMENTS.md §Perf
+    iteration 5). For each param we add the data axes to the largest
+    unsharded dim that divides; XLA then emits the classic ZeRO pattern
+    (reduce-scatter grads -> local moment update -> all-gather params).
+    """
+    if param_shapes is None or mesh is None:
+        return {"mu": param_specs, "nu": param_specs,
+                "step": jax.sharding.PartitionSpec()}
+    d = _data(mesh)
+    d_size = 1
+    for ax in (d or ()):
+        d_size *= mesh.shape[ax]
+
+    def zero1(spec, shape_leaf):
+        shape = shape_leaf.shape
+        if d is None or not shape:
+            return spec
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        cands = [i for i, e in enumerate(entries)
+                 if e is None and shape[i] % d_size == 0 and shape[i] > 1]
+        if not cands:
+            return spec
+        best = max(cands, key=lambda i: shape[i])
+        entries[best] = d if len(d) > 1 else d[0]
+        return jax.sharding.PartitionSpec(*entries)
+
+    moment_specs = jax.tree_util.tree_map(
+        zero1, param_specs, param_shapes,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    return {"mu": moment_specs, "nu": moment_specs,
+            "step": jax.sharding.PartitionSpec()}
+
+
+def spec_to_sharding(mesh: Mesh, tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+
+def _by_path(tree, rule):
+    def walk(path, t):
+        if isinstance(t, dict):
+            return {k: walk(f"{path}/{k}", v) for k, v in t.items()}
+        if isinstance(t, (list, tuple)):
+            out = [walk(f"{path}/{i}", v) for i, v in enumerate(t)]
+            return type(t)(out)
+        return rule(path, t)
+
+    return walk("", tree)

@@ -1,0 +1,177 @@
+"""Train/serve step builders for every architecture family.
+
+``build_train_step(arch_cfg)`` returns (step_fn, abstract_state, state_specs,
+batch_maker) where step_fn(state, batch) -> (state, metrics). The same builders
+serve the real launcher (allocated params) and the dry-run (ShapeDtypeStruct
+state via jax.eval_shape — nothing allocated).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LMConfig
+from repro.models import gnn as gnn_mod
+from repro.models import equivariant as eq_mod
+from repro.models import recsys as rec_mod
+from repro.models import transformer as tfm
+from repro.optim.optimizer import AdamWConfig, adamw_update, init_adamw
+from repro.train import sharding as shd
+
+__all__ = ["build_train_step", "build_serve_step", "abstract_train_state",
+           "loss_fn_for"]
+
+
+# ------------------------------------------------------------------- losses
+def loss_fn_for(arch: ArchConfig):
+    m = arch.model
+    if arch.family == "lm":
+        def loss(params, batch):
+            return tfm.lm_loss(params, m, batch["tokens"], batch["targets"])
+    elif arch.family == "gnn" and m.kind == "nequip":
+        def loss(params, batch):
+            return eq_mod.nequip_energy_loss(params, m, batch)
+    elif arch.family == "gnn":
+        def loss(params, batch):
+            return gnn_mod.gnn_loss(params, m, batch)
+    elif arch.family == "recsys":
+        def loss(params, batch):
+            return rec_mod.autoint_loss(params, m, batch)
+    else:
+        raise ValueError(arch.family)
+    return loss
+
+
+def init_params_fn(arch: ArchConfig, d_in: int | None = None):
+    m = arch.model
+    if arch.family == "lm":
+        return lambda key: tfm.init_lm(key, m)
+    if arch.family == "gnn" and m.kind == "nequip":
+        return lambda key: eq_mod.init_nequip(key, m)
+    if arch.family == "gnn":
+        return lambda key: gnn_mod.init_gnn(key, m, d_in)
+    if arch.family == "recsys":
+        return lambda key: rec_mod.init_autoint(key, m)
+    raise ValueError(arch.family)
+
+
+def param_specs_for(arch: ArchConfig, params, mesh):
+    if arch.family == "lm":
+        return shd.lm_param_specs(params, mesh)
+    if arch.family == "recsys":
+        return shd.recsys_param_specs(params, mesh)
+    return shd.gnn_param_specs(params, mesh)
+
+
+# -------------------------------------------------------------- train state
+def abstract_train_state(arch: ArchConfig, d_in: int | None = None):
+    """ShapeDtypeStruct state via eval_shape — zero allocation (dry-run)."""
+    init = init_params_fn(arch, d_in)
+
+    def mk(key):
+        params = init(key)
+        return {"params": params, "opt": init_adamw(params)}
+
+    return jax.eval_shape(mk, jax.random.PRNGKey(0))
+
+
+def concrete_train_state(arch: ArchConfig, key, d_in: int | None = None):
+    params = init_params_fn(arch, d_in)(key)
+    return {"params": params, "opt": init_adamw(params)}
+
+
+def build_train_step(arch: ArchConfig, opt_cfg: AdamWConfig | None = None,
+                     statics: dict | None = None, microbatches: int = 1,
+                     unroll_microbatches: bool = False):
+    """``statics`` (e.g. GNN pool flag / n_graphs) are Python constants
+    folded into the traced function, never jit arguments.
+
+    ``microbatches`` > 1 enables gradient accumulation: the leading batch
+    dim is split and scanned, shrinking activation memory ~k-fold (the knob
+    that fits the 4k-token train cells into 16 GiB/chip — EXPERIMENTS.md
+    §Perf iteration 4). ``unroll_microbatches`` uses a python loop instead of
+    lax.scan so HLO cost analysis sees every microbatch (dry-run only).
+    """
+    opt_cfg = opt_cfg or AdamWConfig()
+    loss_fn = loss_fn_for(arch)
+    statics = statics or {}
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, {**batch, **statics})
+
+    def step(state, batch):
+        params = state["params"]
+        if microbatches <= 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            split = jax.tree_util.tree_map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+
+            def mb(carry, mbatch):
+                loss_acc, g_acc = carry
+                loss, g = grads_of(params, mbatch)
+                g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+                return (loss_acc + loss, g_acc), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            if unroll_microbatches:
+                carry = (jnp.zeros((), jnp.float32), zeros)
+                for i in range(microbatches):
+                    mbatch = jax.tree_util.tree_map(lambda x: x[i], split)
+                    carry, _ = mb(carry, mbatch)
+                loss_sum, grads = carry
+            else:
+                (loss_sum, grads), _ = jax.lax.scan(
+                    mb, (jnp.zeros((), jnp.float32), zeros), split)
+            loss = loss_sum / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+        new_params, new_opt, metrics = adamw_update(
+            opt_cfg, params, grads, state["opt"])
+        metrics = dict(metrics, loss=loss)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return step
+
+
+# ------------------------------------------------------------------ serving
+def build_serve_step(arch: ArchConfig, cell_kind: str,
+                     statics: dict | None = None,
+                     shard_hints: dict | None = None):
+    m = arch.model
+    statics = statics or {}
+    if arch.family == "gnn":
+        m_kind = m.kind
+        inner = (eq_mod.nequip_forward if m_kind == "nequip"
+                 else gnn_mod.gnn_forward)
+
+        def serve(params, batch):
+            return inner(params, m, {**batch, **statics})
+
+        return serve
+    if arch.family == "lm":
+        if cell_kind == "prefill":
+            def serve(params, batch):
+                return tfm.lm_prefill(params, m, batch["tokens"])
+        else:  # decode
+            def serve(params, batch):
+                logits, cache = tfm.lm_decode_step(
+                    params, m, batch["cache"], batch["token"],
+                    shard_hints=shard_hints)
+                return logits, cache
+        return serve
+    if arch.family == "recsys":
+        if cell_kind == "retrieval":
+            def serve(params, batch):
+                return rec_mod.retrieval_scores(
+                    params, m, batch, batch["candidates"],
+                    batch["retrieval_proj"])
+        else:
+            def serve(params, batch):
+                return rec_mod.autoint_forward(params, m, batch)
+        return serve
+    raise ValueError(arch.family)

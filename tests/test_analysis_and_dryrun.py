@@ -1,0 +1,131 @@
+"""HLO parser + roofline units, and validation of the dry-run artifacts
+(reads results/dryrun JSONs — the compile sweep itself runs out-of-band via
+`python -m repro.launch.dryrun`)."""
+
+import json
+import os
+
+import pytest
+
+from repro.analysis.hlo import collective_bytes, collective_summary, count_ops
+from repro.analysis.roofline import RooflineTerms, model_flops
+from repro.configs import ARCH_IDS, get_config
+
+_BASE = os.path.join(os.path.dirname(__file__), "..", "results")
+RESULTS = (os.path.join(_BASE, "dryrun_final")
+           if os.path.isdir(os.path.join(_BASE, "dryrun_final"))
+           else os.path.join(_BASE, "dryrun"))
+
+# Full-batch-giant / replicated-head / capacity-buffer cells documented as
+# not fitting a single v5e chip (EXPERIMENTS.md §Memory-fit status)
+_MEMORY_EXEMPT = {
+    ("nequip", "ogb_products"), ("gatedgcn", "ogb_products"),
+    ("pna", "ogb_products"), ("smollm-360m", "train_4k"),
+    ("qwen3-moe-30b-a3b", "prefill_32k"),
+}
+
+
+class TestHloParser:
+    def test_sync_forms(self):
+        text = """
+  %p = f32[2,8]{1,0} collective-permute(%a), source_target_pairs={{0,1}}
+  %g = bf16[16,4]{1,0} all-gather(%b), replica_groups=[4,4]<=[16]
+  %r = f32[128]{0} all-reduce(%c), replica_groups={{0,1}}, to_apply=%add
+  %s = f32[4]{0} reduce-scatter(%d), replica_groups=[2,8]<=[16]
+  %x = f32[9]{0} add(%a, %b)
+"""
+        s = collective_summary(text)
+        assert s["collective-permute"]["bytes"] == 64
+        assert s["all-gather"]["bytes"] == 128
+        assert s["all-reduce"]["bytes"] == 512
+        assert s["reduce-scatter"]["bytes"] == 4 * 4 * 8
+        assert "add" not in s
+
+    def test_async_tuple_counts_once(self):
+        text = """
+  %st = (f32[4]{0}, f32[16]{0}) all-gather-start(%a), replica_groups=[1,4]<=[4]
+  %dn = f32[16]{0} all-gather-done(%st)
+"""
+        s = collective_summary(text)
+        assert s["all-gather"]["count"] == 1
+        assert s["all-gather"]["bytes"] == 64
+
+    def test_count_ops(self):
+        text = "%f = f32[8]{0} fusion(%a), kind=kLoop\n" \
+               "%d = f32[8,8]{1,0} dot(%a, %b)\n"
+        c = count_ops(text)
+        assert c["fusion"] == 1 and c["dot"] == 1
+
+
+class TestRooflineTerms:
+    def test_dominance_and_bounds(self):
+        t = RooflineTerms(flops=197e12, bytes_accessed=819e9,
+                          collective_bytes=0, chips=1)
+        assert t.compute_s == pytest.approx(1.0)
+        assert t.memory_s == pytest.approx(1.0)
+        assert t.step_time_s == pytest.approx(1.0)
+        t2 = RooflineTerms(flops=1, bytes_accessed=1, collective_bytes=50e9,
+                           chips=1)
+        assert t2.dominant == "collective"
+
+    def test_model_flops_sane(self):
+        for arch_id in ARCH_IDS:
+            arch = get_config(arch_id)
+            for cell in arch.cells:
+                mf = model_flops(arch, cell)
+                assert mf > 0, (arch_id, cell.name)
+
+    def test_moe_active_params_less_than_total(self):
+        m = get_config("qwen3-moe-30b-a3b").model
+        assert m.active_param_count() < m.param_count() / 5
+        # ~30B total / ~3B active per the model card
+        assert 25e9 < m.param_count() < 36e9
+        assert 2e9 < m.active_param_count() < 4.5e9
+
+    def test_llama3_param_count(self):
+        m = get_config("llama3-8b").model
+        assert 7.5e9 < m.param_count() < 8.6e9
+
+
+@pytest.mark.skipif(not os.path.isdir(RESULTS),
+                    reason="dry-run artifacts not present")
+class TestDryrunArtifacts:
+    def _records(self):
+        recs = []
+        for f in os.listdir(RESULTS):
+            if f.endswith(".json"):
+                with open(os.path.join(RESULTS, f)) as fh:
+                    recs.append(json.load(fh))
+        return recs
+
+    def test_all_cells_present_and_ok(self):
+        recs = self._records()
+        seen = {(r["arch"], r["cell"], r["mesh"]) for r in recs}
+        for arch_id in ARCH_IDS:
+            for cell in get_config(arch_id).cells:
+                for mesh in ("single", "multi"):
+                    assert (arch_id, cell.name, mesh) in seen, \
+                        (arch_id, cell.name, mesh)
+        bad = [r for r in recs if not r.get("ok")]
+        assert not bad, [(r["arch"], r["cell"], r["mesh"]) for r in bad]
+
+    def test_roofline_terms_positive(self):
+        for r in self._records():
+            rf = r["roofline"]
+            assert rf["flops"] > 0
+            assert rf["bytes"] > 0
+            assert rf["dominant"] in ("compute", "memory", "collective")
+
+    def test_memory_fits_hbm(self):
+        # v5e: 16 GiB HBM per chip; arguments+temp must fit (documented
+        # full-batch-infeasible cells exempted — EXPERIMENTS.md §Memory-fit).
+        # Allow 1.25x slack for XLA:CPU's pessimistic temp accounting.
+        for r in self._records():
+            if (r["arch"], r["cell"]) in _MEMORY_EXEMPT:
+                continue
+            m = r["memory"]
+            if m["argument_bytes"] is None:
+                continue
+            total = (m["argument_bytes"] + (m["temp_bytes"] or 0))
+            assert total < 16 * 2**30 * 1.25, \
+                (r["arch"], r["cell"], r["mesh"], total / 2**30)

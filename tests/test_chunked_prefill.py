@@ -1,0 +1,70 @@
+"""Chunked prefill (Sarathi-style): equality with full forward + decode
+handoff. MoE archs route per chunk (capacity groups differ from full-batch
+routing), so their check is directional, not exact — same as production
+chunked-prefill systems."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.models.transformer import (init_decode_cache, init_lm, lm_forward,
+                                      lm_decode_step, lm_prefill_chunked)
+
+
+def _setup(arch_id, B=2, S=32):
+    arch = reduced_config(arch_id)
+    cfg = arch.model
+    key = jax.random.PRNGKey(0)
+    params = init_lm(key, cfg)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    return cfg, params, toks
+
+
+class TestChunkedPrefill:
+    @pytest.mark.parametrize("arch_id", ["smollm-360m", "gemma3-1b"])
+    @pytest.mark.parametrize("chunk", [8, 16])
+    def test_matches_full_forward(self, arch_id, chunk):
+        cfg, params, toks = _setup(arch_id)
+        B, S = toks.shape
+        full, _ = lm_forward(params, cfg, toks)
+        cache = init_decode_cache(cfg, B, S + 4, dtype=jnp.float32)
+        out, cache = lm_prefill_chunked(params, cfg, toks, cache, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(full[:, -chunk:]),
+                                   np.asarray(out), rtol=2e-4, atol=2e-4)
+        assert int(cache["len"]) == S
+
+    @pytest.mark.parametrize("arch_id", ["smollm-360m", "gemma3-1b"])
+    def test_decode_handoff(self, arch_id):
+        cfg, params, toks = _setup(arch_id)
+        B, S = toks.shape
+        cache = init_decode_cache(cfg, B, S + 4, dtype=jnp.float32)
+        _, cache = lm_prefill_chunked(params, cfg, toks, cache, chunk=8)
+        nxt = jax.random.randint(jax.random.PRNGKey(1), (B, 1), 0,
+                                 cfg.vocab_size)
+        dec, cache = lm_decode_step(params, cfg, cache, nxt)
+        full, _ = lm_forward(params, cfg, jnp.concatenate([toks, nxt], 1))
+        np.testing.assert_allclose(np.asarray(full[:, -1:]),
+                                   np.asarray(dec), rtol=2e-3, atol=2e-3)
+        assert int(cache["len"]) == S + 1
+
+    @pytest.mark.parametrize("arch_id", ["deepseek-moe-16b",
+                                         "qwen3-moe-30b-a3b"])
+    def test_moe_chunked_runs_and_correlates(self, arch_id):
+        # per-chunk routing != full-batch routing; assert structural sanity
+        # and strong correlation rather than exact equality
+        cfg, params, toks = _setup(arch_id)
+        B, S = toks.shape
+        full, _ = lm_forward(params, cfg, toks)
+        cache = init_decode_cache(cfg, B, S + 4, dtype=jnp.float32)
+        out, cache = lm_prefill_chunked(params, cfg, toks, cache, chunk=8)
+        a = np.asarray(full[:, -8:]).ravel()
+        b = np.asarray(out).ravel()
+        assert np.isfinite(b).all()
+        corr = np.corrcoef(a, b)[0, 1]
+        # smoke configs drop aggressively (capacity = 1.25*8*k/E with 8-token
+        # groups), so chunk-vs-full routing diverges more than at production
+        # scale where drops are ~0; 0.8 catches real wiring bugs
+        assert corr > 0.8, corr
+        assert int(cache["len"]) == S

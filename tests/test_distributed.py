@@ -1,0 +1,164 @@
+"""Distributed PGBSC + fault-tolerant runner (8 simulated devices).
+
+This module re-execs itself with XLA_FLAGS to get 8 host devices without
+polluting the rest of the test session (jax locks device count at first init).
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+_WORKER = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+import numpy as np
+from repro.core import get_template, count_subgraphs_exact
+from repro.core.colorsets import colorful_probability
+from repro.core.distributed import DistributedPgbsc
+from repro.core.runner import EstimatorRunner, distributed_counter
+from repro.graph import erdos_renyi
+
+assert len(jax.devices()) == 8
+
+g = erdos_renyi(90, 5.0, seed=4)
+t = get_template("u5")
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+dist = DistributedPgbsc(g, t, mesh)
+step, args, shardings = dist.count_step_fn()
+out = np.asarray(jax.jit(step)(*args))
+assert out.shape == (1,) and np.isfinite(out).all(), out
+
+# multi-pod mesh: per-pod independent iterations
+mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                      axis_types=(jax.sharding.AxisType.Auto,) * 3)
+dist3 = DistributedPgbsc(g, t, mesh3)
+step3, args3, _ = dist3.count_step_fn()
+out3 = np.asarray(jax.jit(step3)(*args3))
+assert out3.shape == (2,) and np.isfinite(out3).all()
+
+# determinism: same iteration ids -> same results
+tot_a, per_a = dist3.count_iterations([0, 1, 2, 3], seed=5)
+tot_b, per_b = dist3.count_iterations([0, 1, 2, 3], seed=5)
+assert tot_a == tot_b and per_a == per_b
+
+# mesh-shape independence: single-pod mesh reproduces multi-pod results
+tot_c, per_c = dist.count_iterations([0, 1, 2, 3], seed=5)
+assert per_a == per_c, (per_a, per_c)
+
+# exact agreement with the single-device engine for the same coloring
+from repro.core import build_engine
+from repro.core.distributed import coloring_for_seed
+eng = build_engine(g, t, "pgbsc")
+it0_seed = 5 * 1_000_003 + 0
+colors = np.asarray(coloring_for_seed(it0_seed, dist.n_pad, g.n, t.k))[:g.n]
+want, _ = eng.count_colorful(colors)
+assert float(want) == per_a[0], (float(want), per_a[0])
+
+# estimator statistically matches the exact count
+exact = count_subgraphs_exact(g, t)
+total, per = dist3.count_iterations(list(range(64)), seed=3)
+est = total / 64 / (t.automorphisms * colorful_probability(t.k))
+rel = abs(est - exact) / exact
+assert rel < 0.35, (est, exact, rel)
+
+# ---- fault-tolerant runner: interrupt + resume == uninterrupted ----
+import tempfile, shutil
+tmp = tempfile.mkdtemp()
+try:
+    counter = distributed_counter(dist3, seed=3)
+    r1 = EstimatorRunner(counter, k=t.k, automorphisms=t.automorphisms,
+                         n_iterations=12, ledger_dir=tmp + "/a",
+                         checkpoint_every=4, seed=3)
+    partial = r1.run(max_iterations_this_call=5)   # simulated preemption
+    assert len(partial.completed) >= 5
+    r2 = EstimatorRunner(counter, k=t.k, automorphisms=t.automorphisms,
+                         n_iterations=12, ledger_dir=tmp + "/a",
+                         checkpoint_every=4, seed=3)
+    resumed = r2.run()
+    assert len(resumed.completed) == 12
+    assert resumed.restarts >= 1
+
+    r3 = EstimatorRunner(counter, k=t.k, automorphisms=t.automorphisms,
+                         n_iterations=12, ledger_dir=tmp + "/b",
+                         checkpoint_every=4, seed=3)
+    straight = r3.run()
+    assert abs(straight.count - resumed.count) < 1e-9, \
+        (straight.count, resumed.count)
+
+    # elastic scaling: finish remaining work on a *different* mesh
+    r4 = EstimatorRunner(distributed_counter(dist, seed=3), k=t.k,
+                         automorphisms=t.automorphisms, n_iterations=16,
+                         ledger_dir=tmp + "/a", checkpoint_every=4, seed=3)
+    elastic = r4.run()
+    assert len(elastic.completed) == 16
+finally:
+    shutil.rmtree(tmp)
+
+print("DISTRIBUTED-OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_pgbsc_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", _WORKER], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "DISTRIBUTED-OK" in proc.stdout
+
+
+_DDP_WORKER = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import reduced_config
+from repro.data.synthetic import make_batch
+from repro.optim.optimizer import AdamWConfig
+from repro.train.ddp import build_ddp_step, init_ddp_state
+from repro.train.step import concrete_train_state
+
+arch = reduced_config("smollm-360m")
+mesh = jax.make_mesh((8,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+ocfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=30)
+
+def run(compress):
+    state0 = concrete_train_state(arch, jax.random.PRNGKey(0))
+    state = init_ddp_state(state0["params"])
+    step = jax.jit(build_ddp_step(arch, mesh, ocfg, compress=compress))
+    losses = []
+    for it in range(12):
+        batch = make_batch(arch, "smoke_train",
+                           jax.random.fold_in(jax.random.PRNGKey(5), it))
+        # batch dim 2 -> tile to 8 for the 8-way data axis
+        batch = jax.tree_util.tree_map(
+            lambda x: jnp.tile(x, (4,) + (1,) * (x.ndim - 1)), batch)
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    return losses, state
+
+l_plain, s_plain = run(False)
+l_comp, s_comp = run(True)
+assert l_plain[-1] < l_plain[0], l_plain
+assert l_comp[-1] < l_comp[0], l_comp
+# compressed training tracks uncompressed closely (error feedback)
+assert abs(l_comp[-1] - l_plain[-1]) < 0.35 * abs(l_plain[0]), \
+    (l_plain[-1], l_comp[-1])
+print("DDP-OK")
+"""
+
+
+@pytest.mark.slow
+def test_ddp_compressed_training_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", _DDP_WORKER], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "DDP-OK" in proc.stdout

@@ -1,0 +1,131 @@
+"""Engine correctness: FASCIA = PFASCIA = PGBSC = brute-force oracle.
+
+Counts stay < 2^24 so float32 arithmetic is exact (every intermediate is an
+integer-valued sum/product); equality against the combinatorial oracle is
+asserted exactly.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (CountingEngine, build_engine,
+                        count_colorful_embeddings, count_subgraphs_exact,
+                        get_template)
+from repro.graph import Graph, erdos_renyi, grid_2d, path_graph, star
+from repro.graph.coloring import coloring_numpy
+
+ENGINES = ("fascia", "pfascia", "pgbsc")
+
+
+def _check_all_engines(g, tname, seed=0, iteration=0):
+    t = get_template(tname)
+    colors = coloring_numpy(seed, iteration, g.n, t.k)
+    oracle = count_colorful_embeddings(g, t, colors)
+    for eng in ENGINES:
+        e = build_engine(g, t, eng)
+        total, root = e.count_colorful(colors)
+        assert float(total) == oracle, (eng, tname, float(total), oracle)
+        assert root.shape[-1] == g.n or root.shape[0] == g.n
+        assert not np.isnan(np.asarray(root)).any()
+    return oracle
+
+
+class TestEngineExactness:
+    @pytest.mark.parametrize("tname", ["u3", "path4", "star4", "u5", "path5"])
+    def test_erdos_renyi(self, tname):
+        g = erdos_renyi(18, 3.5, seed=10)
+        _check_all_engines(g, tname)
+
+    @pytest.mark.parametrize("tname", ["u3", "path4", "u5"])
+    def test_grid(self, tname):
+        g = grid_2d(4, 4)
+        _check_all_engines(g, tname)
+
+    def test_star_graph(self):
+        # star template in star graph: stress automorphism handling
+        g = star(10)
+        _check_all_engines(g, "star4")
+
+    def test_path_graph_endpoints(self):
+        g = path_graph(12)
+        _check_all_engines(g, "path5")
+
+    @pytest.mark.parametrize("iteration", range(4))
+    def test_multiple_colorings(self, iteration):
+        g = erdos_renyi(15, 3.0, seed=4)
+        _check_all_engines(g, "u5", seed=2, iteration=iteration)
+
+    def test_dedup_plan_matches(self):
+        g = erdos_renyi(20, 3.0, seed=5)
+        t = get_template("u7")
+        colors = coloring_numpy(1, 0, g.n, t.k)
+        base = build_engine(g, t, "pgbsc", dedup=False)
+        dedup = build_engine(g, t, "pgbsc", dedup=True)
+        a, _ = base.count_colorful(colors)
+        b, _ = dedup.count_colorful(colors)
+        assert float(a) == float(b)
+        assert dedup.plan.n_nodes < base.plan.n_nodes
+
+    def test_disconnected_graph(self):
+        edges = np.array([[0, 1], [1, 2], [4, 5], [5, 6], [6, 7]])
+        g = Graph.from_edges(8, edges)
+        _check_all_engines(g, "u3")
+
+    def test_empty_graphish(self):
+        g = Graph.from_edges(6, np.array([[0, 1]]))
+        t = get_template("u3")
+        e = build_engine(g, t, "pgbsc")
+        colors = coloring_numpy(0, 0, g.n, t.k)
+        total, _ = e.count_colorful(colors)
+        assert float(total) == count_colorful_embeddings(g, t, colors)
+
+
+class TestSpmmBackendsInEngine:
+    @pytest.mark.parametrize("method", ["segment", "ell", "dense",
+                                        "pallas_gather", "pallas_bsr"])
+    def test_backend_exactness(self, method):
+        g = erdos_renyi(140, 5.0, seed=6)
+        t = get_template("u5")
+        colors = coloring_numpy(3, 1, g.n, t.k)
+        ref = build_engine(g, t, "pgbsc", spmm_method="dense")
+        want, _ = ref.count_colorful(colors)
+        e = build_engine(g, t, "pgbsc", spmm_method=method)
+        got, _ = e.count_colorful(colors)
+        assert float(got) == float(want)
+
+    def test_pallas_ema_exactness(self):
+        g = erdos_renyi(140, 5.0, seed=7)
+        t = get_template("u5")
+        colors = coloring_numpy(5, 0, g.n, t.k)
+        ref = build_engine(g, t, "pgbsc")
+        want, _ = ref.count_colorful(colors)
+        e = build_engine(g, t, "pgbsc", spmm_method="pallas_gather",
+                         use_pallas_ema=True)
+        got, _ = e.count_colorful(colors)
+        assert float(got) == float(want)
+
+
+class TestEstimator:
+    def test_estimator_converges(self):
+        g = erdos_renyi(30, 4.0, seed=3)
+        t = get_template("path4")
+        exact = count_subgraphs_exact(g, t)
+        e = build_engine(g, t, "pgbsc")
+        est = e.estimate(n_iters=200, seed=11)
+        assert est["count"] == pytest.approx(exact, rel=0.15)
+
+    def test_estimator_deterministic(self):
+        g = erdos_renyi(25, 3.0, seed=9)
+        t = get_template("u3")
+        e = build_engine(g, t, "pgbsc")
+        a = e.estimate(n_iters=5, seed=1)
+        b = e.estimate(n_iters=5, seed=1)
+        assert a["count"] == b["count"]
+
+    def test_work_estimates_ordering(self):
+        g = erdos_renyi(50, 4.0, seed=1)
+        t = get_template("u7")
+        f = build_engine(g, t, "fascia")
+        p = build_engine(g, t, "pfascia")
+        # pruning strictly reduces traversal flops (paper Table 2)
+        assert p.work.spmm_flops < f.work.spmm_flops

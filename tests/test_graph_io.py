@@ -1,0 +1,50 @@
+"""Edge-list / npz-cache IO round-trips."""
+
+import os
+
+import numpy as np
+
+from repro.graph import Graph, erdos_renyi
+from repro.graph.io import (load_cached, load_edge_list, load_graph_npz,
+                            save_edge_list, save_graph_npz)
+
+
+def test_edge_list_roundtrip(tmp_path):
+    g = erdos_renyi(60, 5.0, seed=2)
+    p = str(tmp_path / "g.txt")
+    save_edge_list(g, p)
+    g2 = load_edge_list(p, n=g.n)
+    assert g2.n == g.n and g2.m == g.m
+    np.testing.assert_array_equal(g.indptr, g2.indptr)
+    np.testing.assert_array_equal(g.indices, g2.indices)
+
+
+def test_npz_roundtrip(tmp_path):
+    g = erdos_renyi(50, 4.0, seed=3)
+    p = str(tmp_path / "g.npz")
+    save_graph_npz(g, p)
+    g2 = load_graph_npz(p)
+    assert g2.n == g.n
+    np.testing.assert_array_equal(g.indices, g2.indices)
+
+
+def test_cached_loader(tmp_path):
+    g = erdos_renyi(40, 4.0, seed=4)
+    p = str(tmp_path / "g.txt")
+    save_edge_list(g, p)
+    g1 = load_cached(p)
+    cache = p + ".cache.npz"
+    assert os.path.isfile(cache)
+    mtime = os.path.getmtime(cache)
+    g2 = load_cached(p)   # second load hits the cache
+    assert os.path.getmtime(cache) == mtime
+    np.testing.assert_array_equal(g1.indices, g2.indices)
+    assert g1.m == g.m
+
+
+def test_comments_and_blank_lines(tmp_path):
+    p = str(tmp_path / "g.txt")
+    with open(p, "w") as f:
+        f.write("# header\n\n0 1\n1 2\n# trailing\n")
+    g = load_edge_list(p)
+    assert g.n == 3 and g.m == 4

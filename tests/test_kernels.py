@@ -1,0 +1,143 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
+swept over shapes, graph families, and block sizes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.graph import Graph, erdos_renyi, grid_2d, rmat, star
+from repro.graph.reorder import apply_order, rcm_order
+from repro.kernels.ema.ops import ema, ema_xla
+from repro.kernels.ema.pallas_ema import ema_pallas
+from repro.kernels.ema.ref import ema_ref
+from repro.kernels.spmm import ops as spmm_ops
+from repro.kernels.spmm.pallas_bsr import spmm_bsr_pallas
+from repro.kernels.spmm.pallas_gather import spmm_gather_pallas
+from repro.kernels.spmm.ref import spmm_dense, spmm_segment_ref
+
+
+def _rand_table(rng, c, n, dtype=np.float32):
+    return jnp.asarray(rng.integers(0, 4, size=(c, n)).astype(dtype))
+
+
+GRAPHS = {
+    "er_small": lambda: erdos_renyi(96, 4.0, seed=0),
+    "er_uneven": lambda: erdos_renyi(130, 7.0, seed=1),   # n % 128 != 0
+    "grid": lambda: grid_2d(12, 11),
+    "star_skew": lambda: star(150),
+    "rmat": lambda: rmat(8, 8, seed=2),
+}
+
+
+class TestSpmmXlaBackends:
+    @pytest.mark.parametrize("gname", sorted(GRAPHS))
+    @pytest.mark.parametrize("method", ["segment", "ell"])
+    @pytest.mark.parametrize("c", [1, 5, 33])
+    def test_matches_dense_oracle(self, gname, method, c):
+        g = GRAPHS[gname]()
+        rng = np.random.default_rng(42)
+        m = _rand_table(rng, c, g.n)
+        want = spmm_dense(m, jnp.asarray(g.to_dense()))
+        prep = spmm_ops.prepare(g, method)
+        got = spmm_ops.spmm(m, prep)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0)
+
+    def test_segment_ref_matches_dense(self):
+        g = GRAPHS["er_small"]()
+        rng = np.random.default_rng(0)
+        m = _rand_table(rng, 7, g.n)
+        src, dst = g.edges_by_dst
+        got = spmm_segment_ref(m, jnp.asarray(src), jnp.asarray(dst), g.n)
+        want = spmm_dense(m, jnp.asarray(g.to_dense()))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0)
+
+
+class TestSpmmPallas:
+    @pytest.mark.parametrize("gname", sorted(GRAPHS))
+    @pytest.mark.parametrize("method", ["pallas_gather", "pallas_bsr"])
+    @pytest.mark.parametrize("c", [3, 20])
+    def test_matches_dense_oracle(self, gname, method, c):
+        g = GRAPHS[gname]()
+        rng = np.random.default_rng(7)
+        m = _rand_table(rng, c, g.n)
+        want = spmm_dense(m, jnp.asarray(g.to_dense()))
+        prep = spmm_ops.prepare(g, method)
+        got = spmm_ops.spmm(m, prep)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0)
+
+    @pytest.mark.parametrize("tile,chunk", [(128, 128), (128, 512), (256, 256)])
+    def test_gather_tile_chunk_sweep(self, tile, chunk):
+        g = erdos_renyi(100, 6.0, seed=3)
+        gp = g.padded(tile)
+        ch = gp.edge_chunks(tile=tile, chunk_size=chunk)
+        rng = np.random.default_rng(1)
+        m = _rand_table(rng, 9, gp.n)
+        got = spmm_gather_pallas(
+            m, jnp.asarray(ch.src), jnp.asarray(ch.dst_local),
+            jnp.asarray(ch.mask), jnp.asarray(ch.src_tile),
+            jnp.asarray(ch.dst_tile), n_tiles=ch.n_tiles, tile=tile,
+            c_block=8)
+        want = spmm_dense(m, jnp.asarray(gp.to_dense()))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0)
+
+    def test_bsr_after_rcm_has_fewer_blocks(self):
+        g = grid_2d(32, 32)
+        base = g.bsr(tile=128)
+        rcm = apply_order(g, rcm_order(g)).bsr(tile=128)
+        assert rcm.n_blocks <= base.n_blocks
+
+    def test_bsr_kernel_direct(self):
+        g = erdos_renyi(300, 5.0, seed=5).padded(128)
+        bs = g.bsr(tile=128)
+        rng = np.random.default_rng(2)
+        m = _rand_table(rng, 16, g.n)
+        got = spmm_bsr_pallas(m, jnp.asarray(bs.blocks),
+                              jnp.asarray(bs.src_tile),
+                              jnp.asarray(bs.dst_tile),
+                              n_tiles=bs.n_tiles, tile=128, c_block=16)
+        want = spmm_dense(m, jnp.asarray(g.to_dense()))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0)
+
+
+class TestEma:
+    @pytest.mark.parametrize("k,t,ta", [(5, 2, 1), (5, 3, 1), (7, 4, 2),
+                                        (9, 5, 2)])
+    @pytest.mark.parametrize("n", [64, 130, 512])
+    def test_xla_matches_ref(self, k, t, ta, n):
+        from repro.core.colorsets import split_tables
+        from math import comb
+        ia, ip = split_tables(k, t, ta)
+        rng = np.random.default_rng(k * 100 + t)
+        m_a = _rand_table(rng, comb(k, ta), n)
+        y_p = _rand_table(rng, comb(k, t - ta), n)
+        want = ema_ref(m_a, y_p, jnp.asarray(ia), jnp.asarray(ip))
+        got = ema_xla(m_a, y_p, jnp.asarray(ia), jnp.asarray(ip))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0)
+
+    @pytest.mark.parametrize("k,t,ta", [(5, 3, 1), (7, 4, 2)])
+    @pytest.mark.parametrize("n", [128, 300])
+    @pytest.mark.parametrize("s_block", [4, 8])
+    def test_pallas_matches_ref(self, k, t, ta, n, s_block):
+        from repro.core.colorsets import split_tables
+        from math import comb
+        ia, ip = split_tables(k, t, ta)
+        rng = np.random.default_rng(k * 10 + ta)
+        m_a = _rand_table(rng, comb(k, ta), n)
+        y_p = _rand_table(rng, comb(k, t - ta), n)
+        want = ema_ref(m_a, y_p, jnp.asarray(ia), jnp.asarray(ip))
+        got = ema_pallas(m_a, y_p, jnp.asarray(ia), jnp.asarray(ip),
+                         s_block=s_block, n_block=256)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0)
+
+    def test_dispatch_fallback(self):
+        # huge tables skip the pallas path but remain correct
+        from repro.core.colorsets import split_tables
+        from math import comb
+        ia, ip = split_tables(5, 3, 1)
+        rng = np.random.default_rng(3)
+        m_a = _rand_table(rng, 5, 64)
+        y_p = _rand_table(rng, 10, 64)
+        want = ema_ref(m_a, y_p, jnp.asarray(ia), jnp.asarray(ip))
+        got = ema(m_a, y_p, jnp.asarray(ia), jnp.asarray(ip), use_pallas=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0)

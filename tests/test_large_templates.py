@@ -1,0 +1,69 @@
+"""Coverage for the paper's larger templates (u10-u17): plan consistency,
+engine agreement across plan variants, and estimator self-consistency."""
+
+import numpy as np
+import pytest
+
+from repro.core import build_engine, get_template
+from repro.graph import erdos_renyi
+from repro.graph.coloring import coloring_numpy
+
+BIG = ["u10", "u12", "u13", "u14", "u15-1", "u15-2", "u16", "u17"]
+
+
+class TestLargeTemplatePlans:
+    @pytest.mark.parametrize("name", BIG)
+    def test_plan_variants_cover_template(self, name):
+        t = get_template(name)
+        for plan in (t.plan, t.plan_dedup, t.plan_optimized):
+            assert plan.nodes[-1].size == t.k
+            # every internal node partitions exactly
+            for nd in plan.nodes:
+                if not nd.is_leaf:
+                    a = plan.nodes[nd.active]
+                    p = plan.nodes[nd.passive]
+                    assert a.size + p.size == nd.size
+
+    @pytest.mark.parametrize("name", BIG)
+    def test_optimized_plan_work_not_worse(self, name):
+        from math import comb
+        t = get_template(name)
+
+        def ema_work(plan):
+            w = 0
+            for nd in plan.nodes:
+                if nd.is_leaf:
+                    continue
+                ta = plan.nodes[nd.active].size
+                w += comb(t.k, nd.size) * comb(nd.size, ta)
+            return w
+
+        assert ema_work(t.plan_optimized) <= ema_work(t.plan_dedup)
+
+
+class TestLargeTemplateCounting:
+    @pytest.mark.parametrize("name", ["u10", "u12"])
+    def test_plan_variants_agree_exactly(self, name):
+        # small graph so the run is quick; counts stay < 2^24 (exact f32)
+        g = erdos_renyi(60, 3.0, seed=12)
+        t = get_template(name)
+        colors = coloring_numpy(8, 0, g.n, t.k)
+        vals = []
+        for plan in ("plain", "dedup", "optimized"):
+            e = build_engine(g, t, "pgbsc", plan=plan)
+            vals.append(float(e.count_colorful(colors)[0]))
+        assert vals[0] == vals[1] == vals[2], (name, vals)
+
+    def test_u13_binary_tree_runs(self):
+        g = erdos_renyi(40, 3.0, seed=13)
+        t = get_template("u13")
+        e = build_engine(g, t, "pgbsc", plan="optimized")
+        colors = coloring_numpy(9, 0, g.n, t.k)
+        total, root = e.count_colorful(colors)
+        assert np.isfinite(float(total))
+        assert root.shape == (1, g.n)  # C(13,13) = 1 combo at the root
+
+    def test_dedup_shrinks_all_big_plans(self):
+        for name in BIG:
+            t = get_template(name)
+            assert t.plan_dedup.n_nodes < t.plan.n_nodes, name

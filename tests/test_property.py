@@ -1,0 +1,141 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (build_engine, count_colorful_embeddings,
+                        get_template, rank_colorset, tree_automorphisms,
+                        unrank_colorset)
+from repro.core.colorsets import colorful_probability, split_tables
+from repro.core.templates import TreeTemplate
+from repro.graph import Graph
+from repro.graph.coloring import coloring_numpy
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+# ------------------------------------------------------------- strategies
+@st.composite
+def random_tree(draw, min_k=2, max_k=8):
+    """Random tree via random parent assignment (valid by construction)."""
+    k = draw(st.integers(min_k, max_k))
+    edges = []
+    for v in range(1, k):
+        parent = draw(st.integers(0, v - 1))
+        edges.append((parent, v))
+    return TreeTemplate(edges, name=f"rand{k}")
+
+
+@st.composite
+def random_graph(draw, min_n=4, max_n=14):
+    n = draw(st.integers(min_n, max_n))
+    m = draw(st.integers(0, n * 3))
+    edges = [(draw(st.integers(0, n - 1)), draw(st.integers(0, n - 1)))
+             for _ in range(m)]
+    return Graph.from_edges(n, np.asarray(edges, np.int64).reshape(-1, 2))
+
+
+# ------------------------------------------------------------- properties
+class TestColorsetProperties:
+    @given(st.integers(2, 12), st.data())
+    def test_rank_unrank_roundtrip(self, k, data):
+        h = data.draw(st.integers(1, k))
+        from math import comb
+        idx = data.draw(st.integers(0, comb(k, h) - 1))
+        cs = unrank_colorset(idx, h, k)
+        assert len(cs) == h and len(set(cs)) == h
+        assert all(0 <= c < k for c in cs)
+        assert rank_colorset(cs) == idx
+
+    @given(st.integers(2, 10), st.data())
+    def test_split_tables_are_valid_indices(self, k, data):
+        from math import comb
+        t = data.draw(st.integers(2, k))
+        ta = data.draw(st.integers(1, t - 1))
+        ia, ip = split_tables(k, t, ta)
+        assert ia.max() < comb(k, ta) and ia.min() >= 0
+        assert ip.max() < comb(k, t - ta) and ip.min() >= 0
+
+
+class TestTemplateProperties:
+    @given(random_tree())
+    def test_plan_sizes_partition(self, t):
+        plan = t.plan
+        for nd in plan.nodes:
+            if not nd.is_leaf:
+                a, p = plan.nodes[nd.active], plan.nodes[nd.passive]
+                assert set(a.vertices) | set(p.vertices) == set(nd.vertices)
+                assert not set(a.vertices) & set(p.vertices)
+
+    @given(random_tree())
+    def test_automorphisms_divide_factorial(self, t):
+        from math import factorial
+        aut = tree_automorphisms(t.edges, t.k)
+        assert aut >= 1
+        assert factorial(t.k) % aut == 0
+
+    @given(random_tree())
+    def test_dedup_preserves_root(self, t):
+        assert t.plan_dedup.nodes[-1].size == t.k
+        assert t.plan_dedup.n_nodes <= t.plan.n_nodes
+
+
+class TestEngineProperties:
+    @given(random_graph(), st.integers(0, 3))
+    @settings(max_examples=10, deadline=None)
+    def test_pgbsc_matches_oracle_on_u3(self, g, it):
+        t = get_template("u3")
+        colors = coloring_numpy(11, it, g.n, t.k)
+        eng = build_engine(g, t, "pgbsc")
+        total, _ = eng.count_colorful(colors)
+        assert float(total) == count_colorful_embeddings(g, t, colors)
+
+    @given(random_tree(min_k=2, max_k=5))
+    @settings(max_examples=8, deadline=None)
+    def test_engines_agree_on_random_trees(self, t):
+        g = Graph.from_edges(
+            10, np.asarray([(i, (i + 1) % 10) for i in range(10)]
+                           + [(i, (i + 3) % 10) for i in range(10)]))
+        colors = coloring_numpy(5, 0, g.n, t.k)
+        vals = []
+        for eng in ("fascia", "pfascia", "pgbsc"):
+            e = build_engine(g, t, eng)
+            vals.append(float(e.count_colorful(colors)[0]))
+        assert vals[0] == vals[1] == vals[2]
+
+    @given(st.integers(1, 12))
+    def test_colorful_probability_bounds(self, k):
+        p = colorful_probability(k)
+        assert 0 < p <= 1
+        if k > 1:
+            assert p < 1
+
+
+class TestGraphStructureProperties:
+    @given(random_graph())
+    def test_csr_is_symmetric_simple(self, g):
+        a = g.to_dense()
+        assert (a == a.T).all()
+        assert np.trace(a) == 0
+        assert set(np.unique(a)) <= {0.0, 1.0}
+
+    @given(random_graph())
+    def test_edge_chunks_cover_all_edges(self, g):
+        ch = g.padded(128).edge_chunks(tile=128, chunk_size=64)
+        assert int(ch.mask.sum()) == g.m
+        # every dst tile present
+        assert set(ch.dst_tile.tolist()) == set(range(ch.n_tiles))
+
+    @given(random_graph())
+    def test_bsr_nnz_matches(self, g):
+        bs = g.padded(128).bsr(tile=128)
+        assert int(sum(b.sum() for b in bs.blocks)) == g.m
+
+    @given(random_graph())
+    def test_rcm_is_permutation(self, g):
+        from repro.graph.reorder import apply_order, rcm_order
+        order = rcm_order(g)
+        assert sorted(order.tolist()) == list(range(g.n))
+        g2 = apply_order(g, order)
+        assert g2.m == g.m

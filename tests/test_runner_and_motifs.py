@@ -1,0 +1,101 @@
+"""Fault-tolerant runner (single-device path) + motif features + data."""
+
+import os
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import build_engine, count_subgraphs_exact, get_template
+from repro.core.motif_features import motif_features
+from repro.core.runner import EstimatorRunner, engine_counter
+from repro.graph import erdos_renyi, star
+
+
+class TestRunner:
+    def _mk(self, tmp, n_iters=10, sub="a"):
+        g = erdos_renyi(30, 4.0, seed=0)
+        t = get_template("u3")
+        eng = build_engine(g, t, "pgbsc")
+        return EstimatorRunner(
+            engine_counter(eng, seed=9), k=t.k,
+            automorphisms=t.automorphisms, n_iterations=n_iters,
+            ledger_dir=os.path.join(tmp, sub), checkpoint_every=3, seed=9)
+
+    def test_resume_equals_straight(self, tmp_path):
+        r1 = self._mk(str(tmp_path), sub="x")
+        partial = r1.run(max_iterations_this_call=4)
+        assert len(partial.completed) == 4
+        resumed = self._mk(str(tmp_path), sub="x").run()
+        straight = self._mk(str(tmp_path), sub="y").run()
+        assert resumed.count == straight.count
+        assert len(resumed.completed) == 10
+        assert resumed.restarts >= 1
+
+    def test_ledger_mismatch_restarts_clean(self, tmp_path):
+        r1 = self._mk(str(tmp_path), n_iters=5, sub="z")
+        r1.run()
+        # different iteration budget -> fresh ledger
+        r2 = self._mk(str(tmp_path), n_iters=8, sub="z")
+        res = r2.run()
+        assert len(res.completed) == 8
+
+    def test_estimate_near_exact(self, tmp_path):
+        g = erdos_renyi(30, 4.0, seed=0)
+        t = get_template("u3")
+        eng = build_engine(g, t, "pgbsc")
+        r = EstimatorRunner(engine_counter(eng, seed=1), k=t.k,
+                            automorphisms=t.automorphisms, n_iterations=150,
+                            ledger_dir=str(tmp_path / "e"),
+                            checkpoint_every=50, seed=1)
+        res = r.run()
+        exact = count_subgraphs_exact(g, t)
+        assert res.count == pytest.approx(exact, rel=0.25)
+
+
+class TestMotifFeatures:
+    def test_star_center_has_more_stars(self):
+        g = star(12)
+        f = motif_features(g, ["star4"], n_iters=12, seed=0, log1p=False)
+        assert f.shape == (12, 1)
+        # the hub roots far more star4 copies than any leaf
+        assert f[0, 0] > 5 * f[1:, 0].max()
+
+    def test_deterministic(self):
+        g = erdos_renyi(25, 3.0, seed=2)
+        a = motif_features(g, ["u3"], n_iters=4, seed=5)
+        b = motif_features(g, ["u3"], n_iters=4, seed=5)
+        np.testing.assert_array_equal(a, b)
+
+
+class TestSyntheticData:
+    def test_lm_batches_deterministic_and_bounded(self):
+        from repro.configs import reduced_config
+        from repro.data.synthetic import make_batch
+        arch = reduced_config("smollm-360m")
+        b1 = make_batch(arch, "smoke_train", jax.random.PRNGKey(3))
+        b2 = make_batch(arch, "smoke_train", jax.random.PRNGKey(3))
+        np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                      np.asarray(b2["tokens"]))
+        assert int(b1["tokens"].max()) < arch.model.vocab_size
+        # autoregressive consistency: targets are tokens shifted by one
+        np.testing.assert_array_equal(np.asarray(b1["tokens"][:, 1:]),
+                                      np.asarray(b1["targets"][:, :-1]))
+
+    def test_specs_match_batches_for_all_archs(self):
+        from repro.configs import ARCH_IDS, input_specs, reduced_config
+        from repro.data.synthetic import make_batch
+        for arch_id in ARCH_IDS:
+            arch = reduced_config(arch_id)
+            for cell in arch.cells:
+                specs, _, _ = input_specs(arch, cell.name)
+                batch = make_batch(arch, cell.name, jax.random.PRNGKey(0))
+                flat_s = jax.tree_util.tree_flatten(specs)[0]
+                sdict = {jax.tree_util.tree_structure(specs): None}
+                # same tree structure and identical shapes/dtypes
+                bs = jax.tree_util.tree_map(
+                    lambda x: (tuple(x.shape), str(x.dtype)), batch)
+                ss = jax.tree_util.tree_map(
+                    lambda x: (tuple(x.shape), str(x.dtype)), specs)
+                assert bs == ss, (arch_id, cell.name, bs, ss)

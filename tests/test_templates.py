@@ -1,0 +1,143 @@
+"""Template partitioning, color-set indexing, automorphisms."""
+
+from itertools import combinations
+from math import comb, factorial
+
+import numpy as np
+import pytest
+
+from repro.core import (STANDARD_TEMPLATES, TreeTemplate, all_colorsets,
+                        get_template, rank_colorset, split_tables,
+                        tree_automorphisms, unrank_colorset)
+
+
+class TestTemplates:
+    def test_all_standard_templates_are_trees(self):
+        for name, t in STANDARD_TEMPLATES.items():
+            assert len(t.edges) == t.k - 1, name
+
+    @pytest.mark.parametrize("name", sorted(STANDARD_TEMPLATES))
+    def test_plan_structure(self, name):
+        t = get_template(name)
+        plan = t.plan
+        # post-order: children precede parents; root node covers all vertices
+        assert plan.nodes[-1].size == t.k
+        sizes = set()
+        for i, nd in enumerate(plan.nodes):
+            if nd.is_leaf:
+                assert nd.size == 1
+            else:
+                a, p = plan.nodes[nd.active], plan.nodes[nd.passive]
+                assert a.size + p.size == nd.size
+                assert nd.active < i and nd.passive < i
+                # active child keeps the root
+                assert a.root == nd.root
+            sizes.add(nd.size)
+
+    @pytest.mark.parametrize("name", ["u10", "u12", "u13", "u15-1", "u17"])
+    def test_dedup_plan_is_smaller_and_consistent(self, name):
+        t = get_template(name)
+        assert t.plan_dedup.n_nodes <= t.plan.n_nodes
+        assert t.plan_dedup.nodes[-1].size == t.k
+
+    def test_invalid_templates_rejected(self):
+        with pytest.raises(ValueError):
+            TreeTemplate([(0, 1), (0, 1)])  # duplicate edge -> not a tree
+        with pytest.raises(ValueError):
+            TreeTemplate([(0, 1), (2, 3)])  # forest with a 4th vertex missing edge
+
+
+class TestColorsets:
+    @pytest.mark.parametrize("k,h", [(3, 1), (5, 2), (7, 3), (10, 5), (12, 6)])
+    def test_rank_is_bijection(self, k, h):
+        ranks = [rank_colorset(c) for c in combinations(range(k), h)]
+        assert sorted(ranks) == list(range(comb(k, h)))
+
+    @pytest.mark.parametrize("k,h", [(5, 2), (8, 4), (11, 3)])
+    def test_unrank_inverts_rank(self, k, h):
+        for c in combinations(range(k), h):
+            assert unrank_colorset(rank_colorset(c), h, k) == tuple(c)
+
+    def test_all_colorsets_ordering(self):
+        sets = all_colorsets(6, 3)
+        for i, s in enumerate(sets):
+            assert rank_colorset(s) == i
+
+    @pytest.mark.parametrize("k,t,ta", [(5, 3, 1), (7, 4, 2), (10, 6, 3)])
+    def test_split_tables_partition_colorsets(self, k, t, ta):
+        ia, ip = split_tables(k, t, ta)
+        assert ia.shape == (comb(k, t), comb(t, ta))
+        sets_t = all_colorsets(k, t)
+        sets_a = all_colorsets(k, ta)
+        sets_p = all_colorsets(k, t - ta)
+        for j, cset in enumerate(sets_t):
+            for l in range(ia.shape[1]):
+                a = set(sets_a[ia[j, l]])
+                p = set(sets_p[ip[j, l]])
+                assert a | p == set(cset)
+                assert not (a & p)
+
+
+class TestAutomorphisms:
+    @pytest.mark.parametrize("k", [2, 3, 5, 8])
+    def test_path(self, k):
+        edges = [(i, i + 1) for i in range(k - 1)]
+        assert tree_automorphisms(edges, k) == 2 if k > 1 else 1
+
+    @pytest.mark.parametrize("k", [3, 4, 6, 9])
+    def test_star(self, k):
+        edges = [(0, i) for i in range(1, k)]
+        assert tree_automorphisms(edges, k) == factorial(k - 1)
+
+    def test_spider(self):
+        # 3 legs of length 2 from a hub: aut = 3! = 6
+        edges = [(0, 1), (1, 2), (0, 3), (3, 4), (0, 5), (5, 6)]
+        assert tree_automorphisms(edges, 7) == 6
+
+    def test_bicentral_symmetric(self):
+        # two stars joined by an edge: aut = 2 * (2!)^2
+        edges = [(0, 1), (0, 2), (0, 3), (3, 4), (3, 5)]
+        assert tree_automorphisms(edges, 6) == 8
+
+    def test_matches_brute_force(self):
+        # brute-force check on all trees of size <= 6 (Prüfer enumeration)
+        from itertools import product
+
+        def prufer_to_tree(seq, k):
+            degree = [1] * k
+            for v in seq:
+                degree[v] += 1
+            edges = []
+            ptr = 0
+            leaves = sorted(i for i in range(k) if degree[i] == 1)
+            import heapq
+            heapq.heapify(leaves)
+            for v in seq:
+                leaf = heapq.heappop(leaves)
+                edges.append((leaf, v))
+                degree[v] -= 1
+                if degree[v] == 1:
+                    heapq.heappush(leaves, v)
+            u = heapq.heappop(leaves)
+            w = heapq.heappop(leaves)
+            edges.append((u, w))
+            return edges
+
+        def brute_aut(edges, k):
+            from itertools import permutations
+            eset = {frozenset(e) for e in edges}
+            count = 0
+            for perm in permutations(range(k)):
+                if all(frozenset((perm[a], perm[b])) in eset for a, b in eset):
+                    count += 1
+            return count
+
+        for k in (4, 5, 6):
+            seen = set()
+            for seq in product(range(k), repeat=k - 2):
+                edges = tuple(sorted(tuple(sorted(e))
+                                     for e in prufer_to_tree(list(seq), k)))
+                if edges in seen:
+                    continue
+                seen.add(edges)
+                assert tree_automorphisms(edges, k) == brute_aut(edges, k)
