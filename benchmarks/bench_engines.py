@@ -4,6 +4,10 @@ FASCIA vs PFASCIA vs PGBSC on RMAT graphs, increasing template size. The
 paper's headline claim — the pruning speedup grows with template size and
 graph skew, and vectorized PGBSC adds a further constant factor — must
 reproduce qualitatively on CPU (absolute numbers are hardware-specific).
+
+Also sweeps the batched estimator pipeline (``batch/...`` rows): estimator
+iterations/sec for the sequential per-coloring loop vs. batched dispatch at
+increasing batch sizes — the dispatch-overhead lever of the batch PR.
 """
 
 from __future__ import annotations
@@ -19,6 +23,8 @@ GRAPH_SCALE = 11          # 2048 vertices
 EDGE_FACTOR = 16
 TEMPLATES = ("u5", "u7", "u10")
 ENGINES = ("fascia", "pfascia", "pgbsc")
+BATCH_SIZES = (1, 8, 16)
+BATCH_ITERS = 16          # estimator iterations per throughput measurement
 
 
 def run() -> dict:
@@ -45,4 +51,34 @@ def run() -> dict:
              times["fascia"] / times["pgbsc"] * 1e6,
              f"x{times['fascia'] / times['pgbsc']:.2f}")
         results[tname] = times
+
+    results["batch"] = _bench_batched(g)
     return results
+
+
+def _bench_batched(g) -> dict[str, float]:
+    """Estimator iterations/sec: sequential loop vs batched pipeline."""
+    t = get_template("u5")
+    e = build_engine(g, t, "pgbsc")
+    out: dict[str, float] = {}
+
+    def sequential():
+        vals = []
+        for it in range(BATCH_ITERS):
+            colors = coloring_numpy(0, it, g.n, t.k)
+            vals.append(e.count_colorful(colors)[0])
+        return vals
+
+    sec_seq = timeit(sequential)
+    out["sequential"] = BATCH_ITERS / sec_seq
+    emit("batch/u5/sequential", sec_seq / BATCH_ITERS * 1e6,
+         f"{out['sequential']:.1f} iters/s")
+
+    for bs in BATCH_SIZES:
+        sec = timeit(lambda: list(e.count_iterations_batch(
+            range(BATCH_ITERS), seed=0, batch_size=bs).values()))
+        out[f"bs{bs}"] = BATCH_ITERS / sec
+        emit(f"batch/u5/bs{bs}", sec / BATCH_ITERS * 1e6,
+             f"{out[f'bs{bs}']:.1f} iters/s "
+             f"x{sec_seq / sec:.2f} vs sequential")
+    return out

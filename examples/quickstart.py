@@ -11,7 +11,10 @@ print(f"graph: n={g.n} directed-edge-slots={g.m} avg_deg={g.avg_degree:.1f}")
 
 for tname in ("u3", "u5", "u7"):
     t = get_template(tname)
-    engine = build_engine(g, t, engine="pgbsc", dedup=True)
+    # batch_size chunks the estimator's coloring batches: each device call
+    # runs 25 colorings through the plan at once (peak table memory per plan
+    # node ~ batch_size * C(k, t) * n floats).
+    engine = build_engine(g, t, engine="pgbsc", dedup=True, batch_size=25)
     est = engine.estimate(n_iters=50, seed=42)
     line = (f"{tname} (k={t.k}, aut={t.automorphisms}): "
             f"estimate={est['count']:.4g} +- {est['std']:.2g}")
@@ -19,12 +22,14 @@ for tname in ("u3", "u5", "u7"):
         line += f"  exact={count_subgraphs_exact(g, t)}"
     print(line)
 
-# compare the three engines of the paper on one coloring
-from repro.graph.coloring import coloring_numpy
+# compare the three engines of the paper on a batch of colorings: one
+# batched device call per engine instead of a Python loop
+from repro.graph.coloring import batch_colorings
 t = get_template("u5")
-colors = coloring_numpy(7, 0, g.n, t.k)
+colorings = batch_colorings(7, range(8), g.n, t.k)   # (8, n) device-side
 for eng in ("fascia", "pfascia", "pgbsc"):
     e = build_engine(g, t, eng)
-    total, _ = e.count_colorful(colors)
-    print(f"{eng:8s} colorful-count = {float(total):.6g} "
-          f"(work: {e.work.total_flops / 1e6:.1f} Mflop)")
+    totals, _ = e.count_colorful_batch(colorings)
+    print(f"{eng:8s} colorful-counts[0:3] = "
+          f"{[round(float(v), 1) for v in totals[:3]]} "
+          f"(work: {e.work.total_flops / 1e6:.1f} Mflop/coloring)")

@@ -109,27 +109,33 @@ class EstimatorRunner:
         )
 
 
-def engine_counter(engine, seed: int = 0):
-    """Adapt a CountingEngine to the runner's counter interface."""
-    from repro.graph.coloring import iteration_key, random_coloring
+def engine_counter(engine, seed: int = 0, batch_size: int | None = None):
+    """Adapt a CountingEngine to the runner's counter interface.
+
+    A whole checkpoint batch is dispatched as ONE device call through the
+    engine's batched pipeline (colorings generated device-side from
+    ``fold_in(seed, iteration)``); ``batch_size`` overrides the engine's
+    chunking knob. Per-iteration values are independent of how iterations
+    are grouped into batches, so resumed runs reproduce straight runs.
+    """
 
     def counter(iterations):
-        out = {}
-        for it in iterations:
-            key = iteration_key(seed, it)
-            colors = random_coloring(key, engine.g.n, engine.k)
-            total, _ = engine.count_colorful(colors)
-            out[it] = float(total)
-        return out
+        return engine.count_iterations_batch(list(iterations), seed=seed,
+                                             batch_size=batch_size)
 
     return counter
 
 
-def distributed_counter(dist, seed: int = 0):
-    """Adapt a DistributedPgbsc to the runner's counter interface."""
+def distributed_counter(dist, seed: int = 0, batch_size: int | None = None):
+    """Adapt a DistributedPgbsc to the runner's counter interface.
+
+    ``batch_size`` = coloring iterations per pod per device call (scanned
+    inside the jit); None keeps the DistributedPgbsc default.
+    """
 
     def counter(iterations):
-        _, per_iter = dist.count_iterations(list(iterations), seed=seed)
+        kw = {} if batch_size is None else {"batch_size": batch_size}
+        _, per_iter = dist.count_iterations(list(iterations), seed=seed, **kw)
         return per_iter
 
     return counter

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["random_coloring", "iteration_key"]
+__all__ = ["random_coloring", "iteration_key", "batch_colorings"]
 
 
 def random_coloring(key: jax.Array, n: int, k: int) -> jax.Array:
@@ -19,6 +19,20 @@ def iteration_key(seed: int, iteration: int) -> jax.Array:
     work that any worker (pod) can execute — the basis of the fault-tolerance
     story (see core/runner.py)."""
     return jax.random.fold_in(jax.random.PRNGKey(seed), iteration)
+
+
+def batch_colorings(seed, iterations: jax.Array, n: int, k: int) -> jax.Array:
+    """(B, n) int32 colorings for a batch of iteration ids — jit-traceable.
+
+    Row b equals ``random_coloring(iteration_key(seed, iterations[b]), n, k)``
+    bit-for-bit, so batched estimators reproduce the sequential ones exactly.
+    Both ``seed`` and ``iterations`` may be traced values, which lets the
+    whole generation run device-side inside the caller's jit.
+    """
+    base = jax.random.PRNGKey(seed)
+    its = jnp.asarray(iterations, jnp.int32)
+    keys = jax.vmap(lambda it: jax.random.fold_in(base, it))(its)
+    return jax.vmap(lambda kk: random_coloring(kk, n, k))(keys)
 
 
 def coloring_numpy(seed: int, iteration: int, n: int, k: int) -> np.ndarray:

@@ -22,11 +22,14 @@ _PALLAS_N_BLOCK = 512
 
 def ema_xla(m_a: jnp.ndarray, y_p: jnp.ndarray,
             ia: jnp.ndarray, ip: jnp.ndarray) -> jnp.ndarray:
+    """Child tables (..., C, N); gathers run on axis -2 so an optional
+    leading batch dimension broadcasts through the scan untouched."""
     def body(acc, idx):
         ia_l, ip_l = idx
-        return acc + m_a[ia_l, :] * y_p[ip_l, :], None
+        term = jnp.take(m_a, ia_l, axis=-2) * jnp.take(y_p, ip_l, axis=-2)
+        return acc + term, None
 
-    acc0 = jnp.zeros((ia.shape[0], m_a.shape[1]), m_a.dtype)
+    acc0 = jnp.zeros(m_a.shape[:-2] + (ia.shape[0], m_a.shape[-1]), m_a.dtype)
     acc, _ = jax.lax.scan(body, acc0, (ia.T, ip.T))
     return acc
 
@@ -34,12 +37,19 @@ def ema_xla(m_a: jnp.ndarray, y_p: jnp.ndarray,
 def ema(m_a: jnp.ndarray, y_p: jnp.ndarray, ia: jnp.ndarray, ip: jnp.ndarray,
         *, use_pallas: bool = False, interpret: bool = True) -> jnp.ndarray:
     if use_pallas and _fits_vmem(m_a, y_p):
+        if m_a.ndim > 2:
+            # batched colorings: one kernel launch per batch element inside a
+            # single device call (lax.map keeps the grid spec 2-D)
+            return jax.lax.map(
+                lambda xy: ema_pallas(xy[0], xy[1], ia, ip,
+                                      interpret=interpret),
+                (m_a, y_p))
         return ema_pallas(m_a, y_p, ia, ip, interpret=interpret)
     return ema_xla(m_a, y_p, ia, ip)
 
 
 def _fits_vmem(m_a, y_p) -> bool:
-    resident = (m_a.shape[0] + y_p.shape[0]) * _PALLAS_N_BLOCK * 4
+    resident = (m_a.shape[-2] + y_p.shape[-2]) * _PALLAS_N_BLOCK * 4
     return resident < _PALLAS_VMEM_BYTES
 
 

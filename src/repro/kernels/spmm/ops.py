@@ -120,7 +120,16 @@ def _spmm_ell(m: jnp.ndarray, nbr, mask) -> jnp.ndarray:
 
 
 def spmm(m: jnp.ndarray, prep: SpmmPrep) -> jnp.ndarray:
-    """Y = M @ A for count table m of shape (C, N)."""
+    """Y = M @ A for count table m of shape (..., C, N).
+
+    Leading (batch) dimensions are folded into the combination rows: every
+    backend treats rows independently, so a (B, C, N) batched table is one
+    (B*C, N) SpMM — a single kernel launch for the whole coloring batch.
+    """
+    if m.ndim > 2:
+        lead = m.shape[:-1]
+        out = spmm(m.reshape(-1, m.shape[-1]), prep)
+        return out.reshape(lead + (out.shape[-1],))
     a = prep.arrays
     if prep.method == "segment":
         return _spmm_segment(m, a["src"], a["dst"], prep.n)

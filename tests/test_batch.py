@@ -1,0 +1,159 @@
+"""Batched estimation pipeline: equivalence with the per-coloring path.
+
+The batched plan execution reassociates floating point (batch folded into
+kernel rows / vmap), so agreement is asserted to the documented ~1e-6
+relative tolerance rather than exactly. On these small integer-valued
+counts the results are in practice bitwise identical.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import build_engine, get_template
+from repro.core.runner import EstimatorRunner, engine_counter
+from repro.graph import erdos_renyi
+from repro.graph.coloring import batch_colorings, coloring_numpy
+
+ENGINES = ("fascia", "pfascia", "pgbsc")
+RTOL = 1e-6
+
+
+def _graph():
+    return erdos_renyi(24, 3.5, seed=1)
+
+
+def _colorings(g, t, b=6, seed=7):
+    return np.stack([coloring_numpy(seed, i, g.n, t.k) for i in range(b)])
+
+
+class TestBatchedEquivalence:
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_batch_matches_sequential(self, engine):
+        g, t = _graph(), get_template("u5")
+        colorings = _colorings(g, t)
+        e = build_engine(g, t, engine)
+        seq = np.array([float(e.count_colorful(c)[0]) for c in colorings])
+        tot, roots = e.count_colorful_batch(colorings)
+        np.testing.assert_allclose(np.asarray(tot), seq, rtol=RTOL)
+        assert roots.shape[0] == colorings.shape[0]
+
+    @pytest.mark.parametrize("method", ["segment", "ell", "dense"])
+    def test_batch_across_spmm_backends(self, method):
+        g, t = _graph(), get_template("u5")
+        colorings = _colorings(g, t)
+        e = build_engine(g, t, "pgbsc", spmm_method=method)
+        seq = np.array([float(e.count_colorful(c)[0]) for c in colorings])
+        tot, _ = e.count_colorful_batch(colorings)
+        np.testing.assert_allclose(np.asarray(tot), seq, rtol=RTOL)
+
+    def test_batch_pallas_ema(self):
+        g, t = _graph(), get_template("u3")
+        colorings = _colorings(g, t, b=3)
+        ref = build_engine(g, t, "pgbsc")
+        e = build_engine(g, t, "pgbsc", use_pallas_ema=True)
+        want, _ = ref.count_colorful_batch(colorings)
+        got, _ = e.count_colorful_batch(colorings)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=RTOL)
+
+    def test_chunking_is_invisible(self):
+        # batch_size chunking (incl. padded ragged tail) must not change
+        # per-element results — the basis of resume-equals-straight.
+        g, t = _graph(), get_template("u5")
+        colorings = _colorings(g, t, b=7)
+        e = build_engine(g, t, "pgbsc")
+        whole, _ = e.count_colorful_batch(colorings, batch_size=7)
+        chunked, _ = e.count_colorful_batch(colorings, batch_size=3)
+        np.testing.assert_array_equal(np.asarray(whole), np.asarray(chunked))
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_device_side_colorings_match_host(self, engine):
+        # fold_in(seed, it) inside the jit == host-side coloring_numpy
+        g, t = _graph(), get_template("u3")
+        e = build_engine(g, t, engine, batch_size=4)
+        per = e.count_iterations_batch(range(6), seed=11)
+        for it in range(6):
+            colors = coloring_numpy(11, it, g.n, t.k)
+            want = float(e.count_colorful(colors)[0])
+            assert per[it] == pytest.approx(want, rel=RTOL)
+
+    def test_batch_colorings_rows_match_sequential(self):
+        got = np.asarray(batch_colorings(3, np.arange(5), 17, 4))
+        for it in range(5):
+            np.testing.assert_array_equal(got[it],
+                                          coloring_numpy(3, it, 17, 4))
+
+    def test_estimate_batched_equals_manual_loop(self):
+        g, t = _graph(), get_template("u5")
+        e = build_engine(g, t, "pgbsc")
+        est = e.estimate(n_iters=9, seed=2, batch_size=4)
+        manual = []
+        for it in range(9):
+            colors = coloring_numpy(2, it, g.n, t.k)
+            manual.append(float(e.count_colorful(colors)[0]))
+        manual = np.asarray(manual) / (t.automorphisms *
+                                       est["colorful_probability"])
+        assert est["count"] == pytest.approx(float(manual.mean()), rel=RTOL)
+
+    def test_rejects_unbatched_shape(self):
+        g, t = _graph(), get_template("u3")
+        e = build_engine(g, t, "pgbsc")
+        with pytest.raises(ValueError):
+            e.count_colorful_batch(np.zeros(g.n, np.int32))
+
+
+class TestRunnerBatchedResume:
+    def _runner(self, eng, t, ledger_dir, counter=None, n_iters=10):
+        return EstimatorRunner(
+            counter or engine_counter(eng, seed=9, batch_size=4), k=t.k,
+            automorphisms=t.automorphisms, n_iterations=n_iters,
+            ledger_dir=ledger_dir, checkpoint_every=4, seed=9)
+
+    def test_resume_runs_only_pending_and_matches_unbatched(self, tmp_path):
+        g, t = _graph(), get_template("u3")
+        eng = build_engine(g, t, "pgbsc")
+        led = str(tmp_path / "a")
+
+        # interrupted run: 5 of 10 iterations, ledger written mid-run
+        partial = self._runner(eng, t, led).run(max_iterations_this_call=5)
+        assert sorted(partial.completed) == [0, 1, 2, 3, 4]
+        assert os.path.isfile(os.path.join(led, "ledger.json"))
+
+        # restart with an instrumented batched counter: only pending ids run
+        requested: list[int] = []
+        inner = engine_counter(eng, seed=9, batch_size=4)
+
+        def spy(iterations):
+            requested.extend(int(i) for i in iterations)
+            return inner(iterations)
+
+        resumed = self._runner(eng, t, led, counter=spy).run()
+        assert sorted(requested) == [5, 6, 7, 8, 9]
+        assert len(resumed.completed) == 10
+        assert resumed.restarts >= 1
+
+        # matches the unbatched per-coloring estimate
+        per = []
+        for it in range(10):
+            colors = coloring_numpy(9, it, g.n, t.k)
+            per.append(float(eng.count_colorful(colors)[0]))
+        from repro.core.colorsets import colorful_probability
+        want = (np.mean(per) /
+                (t.automorphisms * colorful_probability(t.k)))
+        assert resumed.count == pytest.approx(float(want), rel=RTOL)
+
+    def test_checkpoint_batches_are_single_dispatch_groups(self, tmp_path):
+        # one counter call per checkpoint batch, whole batch handed over
+        g, t = _graph(), get_template("u3")
+        eng = build_engine(g, t, "pgbsc")
+        calls: list[list[int]] = []
+        inner = engine_counter(eng, seed=9, batch_size=8)
+
+        def spy(iterations):
+            calls.append([int(i) for i in iterations])
+            return inner(iterations)
+
+        self._runner(eng, t, str(tmp_path / "b"), counter=spy).run()
+        assert calls == [[0, 1, 2, 3], [4, 5, 6, 7], [8, 9]]

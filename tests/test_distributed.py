@@ -20,13 +20,13 @@ from repro.core.colorsets import colorful_probability
 from repro.core.distributed import DistributedPgbsc
 from repro.core.runner import EstimatorRunner, distributed_counter
 from repro.graph import erdos_renyi
+from repro.launch.mesh import make_mesh
 
 assert len(jax.devices()) == 8
 
 g = erdos_renyi(90, 5.0, seed=4)
 t = get_template("u5")
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((4, 2), ("data", "model"))
 
 dist = DistributedPgbsc(g, t, mesh)
 step, args, shardings = dist.count_step_fn()
@@ -34,8 +34,7 @@ out = np.asarray(jax.jit(step)(*args))
 assert out.shape == (1,) and np.isfinite(out).all(), out
 
 # multi-pod mesh: per-pod independent iterations
-mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh3 = make_mesh((2, 2, 2), ("pod", "data", "model"))
 dist3 = DistributedPgbsc(g, t, mesh3)
 step3, args3, _ = dist3.count_step_fn()
 out3 = np.asarray(jax.jit(step3)(*args3))
@@ -124,8 +123,8 @@ from repro.train.ddp import build_ddp_step, init_ddp_state
 from repro.train.step import concrete_train_state
 
 arch = reduced_config("smollm-360m")
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((8,), ("data",))
 ocfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=30)
 
 def run(compress):

@@ -71,9 +71,9 @@ class TestCompression:
         # single-device shard_map still exercises the psum path
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
+        from repro.launch.mesh import make_mesh
         from repro.optim.optimizer import compressed_psum
-        mesh = jax.make_mesh((1,), ("d",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((1,), ("d",))
         g = {"w": jnp.asarray(np.random.default_rng(1)
                               .normal(size=(64,)).astype(np.float32))}
         r = {"w": jnp.zeros((64,), jnp.float32)}
@@ -93,9 +93,9 @@ class TestCompression:
         # the time-average exact
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
+        from repro.launch.mesh import make_mesh
         from repro.optim.optimizer import compressed_psum
-        mesh = jax.make_mesh((1,), ("d",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((1,), ("d",))
         g = {"w": jnp.asarray([0.3, -0.7, 1.234, 0.001])}
         r = {"w": jnp.zeros((4,))}
         f = shard_map(lambda g, r: compressed_psum(g, "d", r), mesh=mesh,

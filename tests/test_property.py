@@ -1,6 +1,11 @@
 """Property-based tests (hypothesis) on system invariants."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dev dep (requirements-dev.txt); skip, don't error")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (build_engine, count_colorful_embeddings,
