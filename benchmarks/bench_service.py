@@ -1,0 +1,100 @@
+"""Counting-service benchmarks: request throughput and cache-hit speedup.
+
+    PYTHONPATH=src python -m benchmarks.run --only service
+
+Rows (CSV, via benchmarks.common):
+
+* ``service/cold_first_request``   — engine build + compile + run (the cost
+  an uncached tenant pays once per (graph, template, plan)).
+* ``service/warm_repeat_request``  — same query again: engine cache hit +
+  answer from the group's existing sample stream.
+* ``service/estimate_cache_hit``   — repeat query through the persistent
+  estimate cache in a fresh service (no engine build, no dispatch).
+* ``service/throughput_mixed``     — requests/sec over a mixed-template,
+  distinct-seed workload on a warm service (steady-state scheduling +
+  real device work per request).
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+from benchmarks.common import emit
+from repro.graph import rmat
+from repro.service import CountingService, CountRequest, EstimateCache
+
+GRAPH_SCALE = 9           # 512 vertices
+EDGE_FACTOR = 16
+TEMPLATES = ("u3", "u5", "path4", "star4")
+REQUESTS_PER_TEMPLATE = 4
+
+
+def _run_one(svc, template, rel=0.1, seed=0):
+    rid = svc.submit(CountRequest("g", template, rel_stderr=rel, seed=seed))
+    svc.run()
+    return svc.result(rid)
+
+
+def run() -> dict:
+    g = rmat(GRAPH_SCALE, EDGE_FACTOR, seed=0)
+    out: dict = {}
+
+    # cold vs warm on one template --------------------------------------
+    fd, est_path = tempfile.mkstemp(suffix=".json", prefix="pgbsc_bench_est_")
+    os.close(fd)
+    os.unlink(est_path)   # EstimateCache treats a missing file as empty
+    svc = CountingService(round_size=16, default_max_iters=64,
+                          estimate_cache=est_path)
+    svc.add_graph("g", g)
+    t0 = time.perf_counter()
+    _run_one(svc, "u5")
+    cold = time.perf_counter() - t0
+    emit("service/cold_first_request", cold * 1e6, "build+compile+run")
+    out["cold_s"] = cold
+
+    t0 = time.perf_counter()
+    _run_one(svc, "u5")
+    warm = time.perf_counter() - t0
+    emit("service/warm_repeat_request", warm * 1e6,
+         f"speedup={cold / max(warm, 1e-9):.1f}x")
+    out["warm_s"] = warm
+
+    svc2 = CountingService(round_size=16, default_max_iters=64,
+                           estimate_cache=EstimateCache(est_path))
+    svc2.add_graph("g", g)
+    t0 = time.perf_counter()
+    _run_one(svc2, "u5")
+    hit = time.perf_counter() - t0
+    emit("service/estimate_cache_hit", hit * 1e6,
+         f"speedup={cold / max(hit, 1e-9):.1f}x")
+    out["estimate_hit_s"] = hit
+    os.unlink(est_path)
+
+    # mixed-workload throughput on a warm service -----------------------
+    warm_svc = CountingService(round_size=16, default_max_iters=32)
+    warm_svc.add_graph("g", g)
+    for t in TEMPLATES:                      # warm engines + compile
+        _run_one(warm_svc, t)
+    n_req = REQUESTS_PER_TEMPLATE * len(TEMPLATES)
+    t0 = time.perf_counter()
+    for i in range(n_req):
+        # distinct seeds defeat the estimate/sample caches: every request
+        # does real device work, measuring steady-state scheduling + compute
+        _run_one(warm_svc, TEMPLATES[i % len(TEMPLATES)], seed=100 + i)
+    dt = time.perf_counter() - t0
+    emit("service/throughput_mixed", dt / n_req * 1e6,
+         f"req_per_s={n_req / dt:.2f}")
+    out["req_per_s"] = n_req / dt
+    st = warm_svc.stats()
+    print(f"# warm service: {st['engine_cache']['builds']} builds / "
+          f"{st['requests']} requests, "
+          f"{st['unique_iterations']} device iterations", flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+    header()
+    run()

@@ -22,6 +22,7 @@ BENCHES = {
     "fig13_scaling": "benchmarks.bench_scaling",
     "fig14_error": "benchmarks.bench_error",
     "plans_beyond_paper": "benchmarks.bench_plans",
+    "service": "benchmarks.bench_service",
 }
 
 

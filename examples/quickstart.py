@@ -33,3 +33,26 @@ for eng in ("fascia", "pfascia", "pgbsc"):
     print(f"{eng:8s} colorful-counts[0:3] = "
           f"{[round(float(v), 1) for v in totals[:3]]} "
           f"(work: {e.work.total_flops / 1e6:.1f} Mflop/coloring)")
+
+# --- multi-request counting service ---------------------------------------
+# Many tenants, one scheduler: requests carry a precision target
+# (rel_stderr) instead of a fixed iteration budget, engines are cached by
+# graph-content fingerprint, and requests sharing (graph, template, seed)
+# consume one sample stream — the repeated u3 below adds no device work.
+from repro.service import CountingService, CountRequest
+
+svc = CountingService(round_size=16, default_max_iters=64)
+svc.add_graph("demo", g)
+rids = [svc.submit(CountRequest("demo", tname, rel_stderr=0.15))
+        for tname in ("u3", "u5", "u3")]
+svc.run()
+for rid in rids:
+    r = svc.result(rid)
+    lo, hi = r.ci95
+    print(f"service {rid}: estimate={r.estimate:.4g} +- {r.stderr:.2g} "
+          f"ci95=[{lo:.4g}, {hi:.4g}] ({r.iterations} iters"
+          f"{', shared' if r.shared_group else ''})")
+stats = svc.stats()
+print(f"service: {stats['engine_cache']['builds']} engine builds for "
+      f"{stats['requests']} requests, "
+      f"{stats['unique_iterations']} device iterations")

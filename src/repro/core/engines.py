@@ -123,6 +123,11 @@ class CountingEngine:
         self._count_fn = jax.jit(self._build())
         self._batch_fn = None    # built lazily on first batched call
         self._seeded_fn = None   # jit(seed, iteration ids) -> batch totals
+        # dispatch accounting (service/benchmark introspection): device calls
+        # through the batched pipeline and coloring rows computed by them
+        # (padding rows included — they are real device work)
+        self.n_batch_dispatches = 0
+        self.n_colorings_dispatched = 0
 
     # ------------------------------------------------------------------ api
     def count_colorful(self, colors: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -162,6 +167,8 @@ class CountingEngine:
                 fill = jnp.broadcast_to(chunk[-1:], (pad,) + chunk.shape[1:])
                 chunk = jnp.concatenate([chunk, fill])
             tot, root = self._batch_fn(chunk)
+            self.n_batch_dispatches += 1
+            self.n_colorings_dispatched += bs
             totals.append(tot[: bs - pad])
             roots.append(root[: bs - pad])
         return jnp.concatenate(totals), jnp.concatenate(roots)
@@ -198,6 +205,8 @@ class CountingEngine:
             padded = chunk + [chunk[-1]] * (bs - len(chunk))
             totals = np.asarray(self._seeded_fn(
                 jnp.int32(seed), jnp.asarray(padded, jnp.int32)))
+            self.n_batch_dispatches += 1
+            self.n_colorings_dispatched += bs
             for i, it in enumerate(chunk):
                 out[it] = float(totals[i])
         return out

@@ -39,6 +39,7 @@ class RunnerResult:
     completed: list[int]
     elapsed_s: float
     restarts: int
+    per_iteration: dict[int, float] = dataclasses.field(default_factory=dict)
 
 
 class EstimatorRunner:
@@ -47,10 +48,19 @@ class EstimatorRunner:
     ``counter(iterations: list[int]) -> dict[int, float]`` maps iteration ids
     to colorful sums. Both the single-device CountingEngine and the
     DistributedPgbsc adapt to this via the helpers below.
+
+    Two driving modes share the ledger:
+
+    * **fixed budget** — :meth:`run` executes iterations ``0..n_iterations``;
+    * **adaptive** — construct with ``n_iterations=None`` and call
+      :meth:`run_iterations` with explicit iteration ids chosen round by
+      round (the service scheduler's mode); already-ledgered ids are served
+      from the ledger, so a killed run resumes without recomputation and the
+      total iteration count can grow until a precision target is met.
     """
 
     def __init__(self, counter, *, k: int, automorphisms: int,
-                 n_iterations: int, ledger_dir: str,
+                 n_iterations: int | None, ledger_dir: str,
                  checkpoint_every: int = 8, seed: int = 0):
         self.counter = counter
         self.k = k
@@ -60,6 +70,7 @@ class EstimatorRunner:
         self.ledger_path = os.path.join(ledger_dir, "ledger.json")
         self.checkpoint_every = checkpoint_every
         self.seed = seed
+        self._led: dict | None = None
 
     # ---------------------------------------------------------------- ledger
     def _load_ledger(self) -> dict:
@@ -72,6 +83,15 @@ class EstimatorRunner:
         return {"seed": self.seed, "n_iterations": self.n_iterations,
                 "completed": {}, "restarts": 0}
 
+    def _ledger(self) -> dict:
+        """Ledger loaded once per runner instance; a non-empty ledger on
+        first load means this instance is resuming a previous run."""
+        if self._led is None:
+            self._led = self._load_ledger()
+            if self._led["completed"]:
+                self._led["restarts"] = self._led.get("restarts", 0) + 1
+        return self._led
+
     def _save_ledger(self, led: dict) -> None:
         os.makedirs(self.ledger_dir, exist_ok=True)
         tmp = self.ledger_path + ".tmp"
@@ -79,12 +99,38 @@ class EstimatorRunner:
             json.dump(led, f)
         os.replace(tmp, self.ledger_path)
 
+    def completed_iterations(self) -> dict[int, float]:
+        """Ledgered {iteration id: colorful sum} — work already done."""
+        led = self._ledger()
+        return {int(k): float(v) for k, v in led["completed"].items()}
+
     # ------------------------------------------------------------------ run
+    def run_iterations(self, iterations) -> dict[int, float]:
+        """Run explicit iteration ids, checkpointing; -> {id: colorful sum}.
+
+        Ids already in the ledger are returned without recomputation; fresh
+        ones run through the counter in ``checkpoint_every`` batches (each a
+        single device dispatch for batched engines), the ledger being
+        atomically replaced after every batch.
+        """
+        led = self._ledger()
+        done = {int(k): v for k, v in led["completed"].items()}
+        ids = [int(i) for i in iterations]
+        pending = [i for i in ids if i not in done]
+        for base in range(0, len(pending), self.checkpoint_every):
+            batch = pending[base: base + self.checkpoint_every]
+            for it, val in self.counter(batch).items():
+                done[int(it)] = float(val)
+            led["completed"] = {str(k): v for k, v in done.items()}
+            self._save_ledger(led)
+        return {i: done[i] for i in ids}
+
     def run(self, max_iterations_this_call: int | None = None) -> RunnerResult:
+        if self.n_iterations is None:
+            raise ValueError("run() needs a fixed n_iterations; "
+                             "adaptive runners use run_iterations()")
         t0 = time.time()
-        led = self._load_ledger()
-        if led["completed"]:
-            led["restarts"] = led.get("restarts", 0) + 1
+        led = self._ledger()
         done = {int(k): v for k, v in led["completed"].items()}
         pending = [i for i in range(self.n_iterations) if i not in done]
         if max_iterations_this_call is not None:
@@ -106,6 +152,7 @@ class EstimatorRunner:
             count=est, colorful_sum=total,
             completed=sorted(done), elapsed_s=time.time() - t0,
             restarts=led.get("restarts", 0),
+            per_iteration=dict(sorted(done.items())),
         )
 
 

@@ -18,6 +18,7 @@ graph, A is symmetric and Y[:, i] = sum_{j in N(i)} M[:, j].
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from functools import cached_property
 
 import numpy as np
@@ -137,6 +138,20 @@ class Graph:
     @property
     def avg_degree(self) -> float:
         return float(self.m) / max(1, self.n)
+
+    @cached_property
+    def fingerprint(self) -> str:
+        """Stable content hash of the CSR structure (32 hex chars).
+
+        Identical across processes and machines for identical graphs, so it
+        can key persistent caches (compiled engines, estimate ledgers, .npz
+        dataset caches) without trusting file paths or object identity.
+        """
+        h = hashlib.blake2b(digest_size=16)
+        h.update(np.int64(self.n).tobytes())
+        h.update(np.ascontiguousarray(self.indptr, np.int64).tobytes())
+        h.update(np.ascontiguousarray(self.indices, np.int32).tobytes())
+        return h.hexdigest()
 
     def neighbors(self, v: int) -> np.ndarray:
         return self.indices[self.indptr[v]:self.indptr[v + 1]]

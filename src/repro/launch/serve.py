@@ -1,23 +1,25 @@
-"""Counting service launcher: batched subgraph-counting requests with
-fault-tolerant execution — the serving driver for the paper's kind of system.
+"""Counting service launcher: a thin CLI over ``repro.service``.
 
-    PYTHONPATH=src python -m repro.launch.serve \
-        --graph rmat:12 --templates u5,u7 --iters 32 --ledger /tmp/svc
+    PYTHONPATH=src python -m repro.launch.serve \\
+        --graph rmat:10 --templates u5,u7,u5 --rel-stderr 0.05
 
-Requests = (template, precision target); the service runs color-coding
-iterations through the EstimatorRunner (resumable per request) and reports
-estimates with standard errors. Use --edge-list to serve a real graph.
+Each template in ``--templates`` becomes one service request (repeats are
+real repeated requests — they exercise the engine cache and dispatch-group
+sharing). With ``--rel-stderr`` the scheduler stops each request adaptively
+at the target precision, capped at ``--iters``; without it every request
+runs exactly ``--iters`` iterations. Results always report the estimate,
+its standard error, and the 95% confidence interval from the
+per-iteration color-coding samples. Use ``--edge-list`` to serve a real
+graph; ``--results-cache`` persists answers across invocations.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
-import time
 
-from repro.core import build_engine, get_template
-from repro.core.runner import EstimatorRunner, engine_counter
 from repro.graph import erdos_renyi, rmat
+from repro.service import CountingService, CountRequest
 
 
 def _load_graph(spec: str, edge_list: str | None):
@@ -38,43 +40,63 @@ def main(argv=None):
     ap.add_argument("--graph", default="rmat:12")
     ap.add_argument("--edge-list", default=None)
     ap.add_argument("--templates", default="u5,u7")
-    ap.add_argument("--iters", type=int, default=32)
+    ap.add_argument("--iters", type=int, default=64,
+                    help="iteration cap (exact budget when no --rel-stderr)")
+    ap.add_argument("--rel-stderr", type=float, default=None,
+                    help="adaptive precision target (stderr / |estimate|)")
     ap.add_argument("--ledger", default="/tmp/pgbsc_serve")
+    ap.add_argument("--results-cache", default=None,
+                    help="JSON path for the persistent estimate cache")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--engine", default="pgbsc")
     ap.add_argument("--plan", default="optimized",
                     choices=["plain", "dedup", "optimized"])
+    ap.add_argument("--round-size", type=int, default=8)
+    ap.add_argument("--batch-size", type=int, default=None)
     args = ap.parse_args(argv)
 
     g = _load_graph(args.graph, args.edge_list)
     print(f"serving graph: n={g.n} edge-slots={g.m} "
-          f"avg_deg={g.avg_degree:.1f}")
+          f"avg_deg={g.avg_degree:.1f} fingerprint={g.fingerprint[:12]}")
+
+    svc = CountingService(
+        ledger_root=args.ledger, round_size=args.round_size,
+        default_max_iters=args.iters, batch_size=args.batch_size,
+        estimate_cache=args.results_cache)
+    svc.add_graph("g", g)
+    rids = []
+    for tname in args.templates.split(","):
+        rid = svc.submit(CountRequest(
+            graph="g", template=tname, engine=args.engine, plan=args.plan,
+            rel_stderr=args.rel_stderr, max_iters=args.iters,
+            seed=args.seed))
+        rids.append((rid, tname))
+    svc.run()
 
     results = {}
-    for tname in args.templates.split(","):
-        t = get_template(tname)
-        t0 = time.time()
-        eng = build_engine(g, t, args.engine, plan=args.plan)
-        runner = EstimatorRunner(
-            engine_counter(eng, seed=args.seed), k=t.k,
-            automorphisms=t.automorphisms, n_iterations=args.iters,
-            ledger_dir=f"{args.ledger}/{tname}", checkpoint_every=8,
-            seed=args.seed)
-        res = runner.run()
-        import numpy as np
-        samples = None
-        stderr = 0.0
-        dt = time.time() - t0
-        results[tname] = {
-            "estimate": res.count,
-            "iterations": len(res.completed),
-            "restarts": res.restarts,
-            "seconds": round(dt, 2),
-            "flops_per_iter": eng.flops_per_iteration,
-        }
-        print(f"  {tname}: estimate={res.count:.6g} "
-              f"({len(res.completed)} iters, {dt:.1f}s, "
-              f"restarts={res.restarts})")
+    for rid, tname in rids:
+        res = svc.result(rid)
+        d = res.to_dict()
+        results[f"{rid}:{tname}"] = d
+        lo, hi = res.ci95
+        tags = [t for t, on in (("cache", res.from_cache),
+                                ("shared", res.shared_group)) if on]
+        print(f"  {rid} {tname}: estimate={res.estimate:.6g} "
+              f"+- {res.stderr:.3g} (rel={res.rel_stderr:.3g}, "
+              f"ci95=[{lo:.6g}, {hi:.6g}], {res.iterations} iters, "
+              f"{res.seconds:.1f}s{', ' + '+'.join(tags) if tags else ''})")
+
+    stats = svc.stats()
+    results["_service"] = stats
+    ec = stats["engine_cache"]
+    print(f"engine builds: {ec['builds']} for {len(rids)} requests "
+          f"(cache hits {ec['hits']}, dispatch groups {stats['groups']})")
+    if args.rel_stderr is not None:
+        fixed = args.iters * len(rids)
+        used = stats["unique_iterations"]
+        print(f"adaptive stopping: {used} device iterations vs "
+              f"{fixed} fixed-budget baseline "
+              f"({100 * (1 - used / max(fixed, 1)):.0f}% saved)")
     print(json.dumps(results, indent=1))
 
 

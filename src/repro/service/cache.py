@@ -1,0 +1,130 @@
+"""Engine/plan and estimate caches for the counting service.
+
+Engine builds are the expensive fixed cost of a request: SpMM preparation
+walks the whole edge set and the first dispatch pays jit compilation. The
+:class:`EngineCache` keys built engines by
+``(graph fingerprint, template, engine, plan, build options)`` so repeated
+and concurrent requests never rebuild or recompile — the graph's *content*
+hash (``Graph.fingerprint``) is the key component, so two differently-named
+registrations of the same graph still share one engine.
+
+The :class:`EstimateCache` persists *answers* (estimate, stderr, iteration
+count) keyed by the same identity plus the coloring seed, as a JSON file
+that is atomically replaced on update. A new service process can serve a
+repeat query straight from it — without even building an engine — whenever
+the cached precision already meets the request's target.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from collections import OrderedDict
+
+from repro.core import build_engine, get_template
+from repro.core.engines import CountingEngine
+from repro.graph.structure import Graph
+
+__all__ = ["EngineCache", "EstimateCache"]
+
+
+class EngineCache:
+    """LRU cache of built :class:`CountingEngine` instances.
+
+    ``max_entries`` bounds resident engines (each holds device-side graph
+    formats and compiled executables); None means unbounded. ``hits`` /
+    ``misses`` count lookups, ``builds`` counts actual constructions —
+    the service surfaces these so "no second engine build" is observable.
+    """
+
+    def __init__(self, max_entries: int | None = None):
+        self.max_entries = max_entries
+        self._engines: OrderedDict[tuple, CountingEngine] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.builds = 0
+
+    @staticmethod
+    def key(g: Graph, template: str, engine: str, plan: str,
+            **build_kw) -> tuple:
+        return (g.fingerprint, template, engine, plan,
+                tuple(sorted(build_kw.items())))
+
+    def get(self, g: Graph, template: str, engine: str = "pgbsc",
+            plan: str = "optimized", **build_kw) -> CountingEngine:
+        k = self.key(g, template, engine, plan, **build_kw)
+        if k in self._engines:
+            self.hits += 1
+            self._engines.move_to_end(k)
+            return self._engines[k]
+        self.misses += 1
+        eng = build_engine(g, get_template(template), engine, plan=plan,
+                           **build_kw)
+        self.builds += 1
+        self._engines[k] = eng
+        if self.max_entries is not None:
+            while len(self._engines) > self.max_entries:
+                self._engines.popitem(last=False)
+        return eng
+
+    def __len__(self) -> int:
+        return len(self._engines)
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "builds": self.builds, "resident": len(self._engines)}
+
+
+class EstimateCache:
+    """Persistent map from request identity to a finished estimate.
+
+    Entries: ``{estimate, stderr, rel_stderr, iterations}``. ``path=None``
+    keeps the cache in-memory (tests / ephemeral services). Writes replace
+    the JSON file atomically, matching the runner-ledger durability story.
+    """
+
+    def __init__(self, path: str | None = None):
+        self.path = path
+        self._mem: dict[str, dict] = {}
+        if path and os.path.isfile(path):
+            try:
+                with open(path) as f:
+                    self._mem = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                self._mem = {}
+
+    @staticmethod
+    def key(graph_fingerprint: str, template: str, engine: str, plan: str,
+            seed: int) -> str:
+        return f"{graph_fingerprint}:{template}:{engine}:{plan}:s{seed}"
+
+    def get(self, key: str) -> dict | None:
+        return self._mem.get(key)
+
+    def satisfies(self, key: str, rel_stderr: float | None,
+                  max_iters: int | None, min_iters: int = 0) -> dict | None:
+        """The cached entry, if it already meets the request's precision
+        contract (at least as tight a rel stderr AND at least ``min_iters``
+        samples — the same early-stop guard the scheduler enforces; at
+        least as many iterations as a pure iteration-cap request would
+        run)."""
+        ent = self._mem.get(key)
+        if ent is None:
+            return None
+        if rel_stderr is not None:
+            ok = (ent["rel_stderr"] <= rel_stderr
+                  and ent["iterations"] >= min_iters)
+            return ent if ok else None
+        return ent if ent["iterations"] >= (max_iters or 0) else None
+
+    def put(self, key: str, entry: dict) -> None:
+        self._mem[key] = entry
+        if self.path:
+            os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+            tmp = self.path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(self._mem, f)
+            os.replace(tmp, self.path)
+
+    def __len__(self) -> int:
+        return len(self._mem)

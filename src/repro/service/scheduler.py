@@ -1,0 +1,330 @@
+"""Round-based adaptive-precision scheduler for the counting service.
+
+The scheduler turns a set of live :class:`CountRequest`\\ s into the minimum
+number of device dispatches:
+
+* requests sharing a ``(graph fingerprint, template, engine, plan, seed)``
+  key are attached to one **dispatch group** with a single deterministic
+  sample stream (iteration ids 0, 1, 2, ... colored by
+  ``fold_in(seed, id)``), so N concurrent tenants asking the same question
+  cost the same device work as one;
+* each scheduling round extends every active group by up to ``round_size``
+  iterations through ONE ``count_iterations_batch`` dispatch (via the
+  fault-tolerant :class:`EstimatorRunner` ledger, so a killed service
+  resumes where it stopped);
+* every member request folds the new samples into a Welford running
+  mean/stderr and **retires the moment its relative standard error hits its
+  target**, instead of burning a fixed iteration budget.
+
+Because samples are deterministic functions of (seed, iteration id), a
+request that joins a group late — or a service that restarts on an existing
+ledger — consumes the exact samples a solo run would have produced:
+cross-request batching and resume are estimate-invariant.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+import dataclasses
+
+from repro.core.colorsets import colorful_probability
+from repro.core.runner import EstimatorRunner, engine_counter
+from repro.core.templates import get_template
+from repro.graph.structure import Graph
+from repro.service.cache import EngineCache, EstimateCache
+from repro.service.requests import (CountRequest, RequestResult,
+                                    RequestStatus, RunningStat)
+
+__all__ = ["CountingService"]
+
+
+@dataclasses.dataclass
+class _Group:
+    """One dispatch group: a shared deterministic sample stream."""
+
+    key: tuple
+    graph_name: str
+    runner: EstimatorRunner
+    engine: object
+    scale: float                 # 1 / (automorphisms * colorful_probability)
+    history: list[float]         # history[i] = scaled sample of iteration i
+    cursor: int                  # next fresh iteration id (== len(history))
+    members: list[str]
+
+
+@dataclasses.dataclass
+class _ReqState:
+    request: CountRequest
+    status: RequestStatus
+    stat: RunningStat
+    consumed: int = 0
+    group_key: tuple | None = None
+    shared_group: bool = False
+    from_cache: bool = False
+    result: RequestResult | None = None
+    error: str | None = None
+    t_submit: float = 0.0
+
+    @property
+    def cap(self) -> int:
+        return self.request.max_iters if self.request.max_iters is not None \
+            else self._default_cap
+
+    _default_cap: int = 0
+
+
+class CountingService:
+    """Multi-tenant subgraph-counting service (see module docstring).
+
+    Parameters
+    ----------
+    ledger_root:
+        Directory for per-group iteration ledgers (fault tolerance /
+        resume). Defaults to a fresh temporary directory.
+    engine_cache / estimate_cache:
+        Shared caches; pass explicitly to share engines across services or
+        persist estimates across processes (``estimate_cache`` may be a
+        path string, an :class:`EstimateCache`, or None for in-memory).
+    round_size:
+        Fresh iterations dispatched per group per scheduling round; also
+        the adaptive-stopping granularity.
+    default_max_iters:
+        Iteration cap for requests that specify only ``rel_stderr`` — the
+        hard bound that keeps zero-count or high-variance queries finite.
+    batch_size:
+        Engine chunking knob forwarded to ``engine_counter`` (None = the
+        engine's own default).
+    engine_kw:
+        Extra build options forwarded to every engine construction (e.g.
+        ``spmm_method``); part of the engine-cache key.
+    """
+
+    def __init__(self, *, ledger_root: str | None = None,
+                 engine_cache: EngineCache | None = None,
+                 estimate_cache: EstimateCache | str | None = None,
+                 round_size: int = 8, default_max_iters: int = 256,
+                 checkpoint_every: int | None = None,
+                 batch_size: int | None = None,
+                 engine_kw: dict | None = None):
+        self.ledger_root = ledger_root or tempfile.mkdtemp(
+            prefix="pgbsc_service_")
+        # explicit None checks: both caches define __len__, so a fresh
+        # (empty) shared cache passed by the caller is falsy
+        self.engine_cache = EngineCache() if engine_cache is None \
+            else engine_cache
+        if isinstance(estimate_cache, str):
+            estimate_cache = EstimateCache(estimate_cache)
+        self.estimate_cache = EstimateCache() if estimate_cache is None \
+            else estimate_cache
+        self.round_size = int(round_size)
+        self.default_max_iters = int(default_max_iters)
+        self.checkpoint_every = checkpoint_every or self.round_size
+        self.batch_size = batch_size
+        self.engine_kw = dict(engine_kw or {})
+        self.graphs: dict[str, Graph] = {}
+        self._requests: dict[str, _ReqState] = {}
+        self._groups: dict[tuple, _Group] = {}
+        self._seq = 0
+
+    # ------------------------------------------------------------- tenants
+    def add_graph(self, name: str, g: Graph) -> str:
+        """Register a graph under ``name``; returns its content fingerprint."""
+        self.graphs[name] = g
+        return g.fingerprint
+
+    def submit(self, request: CountRequest) -> str:
+        """Queue a request; returns its id. Served instantly (status DONE,
+        ``from_cache``) when the persistent estimate cache already holds an
+        answer meeting the request's precision contract."""
+        request.validate()
+        if request.graph not in self.graphs:
+            raise KeyError(f"unknown graph {request.graph!r}; "
+                           f"registered: {sorted(self.graphs)}")
+        get_template(request.template)   # fail fast on unknown templates
+        self._seq += 1
+        rid = f"r{self._seq:04d}"
+        st = _ReqState(request=request, status=RequestStatus.PENDING,
+                       stat=RunningStat(), t_submit=time.time())
+        st._default_cap = self.default_max_iters
+        fp = self.graphs[request.graph].fingerprint
+        ck = EstimateCache.key(fp, request.template, request.engine,
+                               request.plan, request.seed)
+        ent = self.estimate_cache.satisfies(ck, request.rel_stderr,
+                                            request.max_iters,
+                                            request.min_iters)
+        if ent is not None:
+            se = float(ent["stderr"])
+            st.status = RequestStatus.DONE
+            st.from_cache = True
+            st.result = RequestResult(
+                estimate=float(ent["estimate"]), stderr=se,
+                rel_stderr=float(ent["rel_stderr"]),
+                ci95=(float(ent["estimate"]) - 1.96 * se,
+                      float(ent["estimate"]) + 1.96 * se),
+                iterations=int(ent["iterations"]), target_met=True,
+                from_cache=True, seconds=0.0)
+        self._requests[rid] = st
+        return rid
+
+    def status(self, rid: str) -> RequestStatus:
+        return self._requests[rid].status
+
+    def result(self, rid: str) -> RequestResult:
+        st = self._requests[rid]
+        if st.result is None:
+            raise RuntimeError(f"request {rid} is {st.status.value}"
+                               + (f": {st.error}" if st.error else ""))
+        return st.result
+
+    def cancel(self, rid: str) -> None:
+        st = self._requests[rid]
+        if st.status in (RequestStatus.PENDING, RequestStatus.RUNNING):
+            st.status = RequestStatus.CANCELLED
+
+    # ----------------------------------------------------------- scheduling
+    def _attach(self, rid: str, st: _ReqState) -> None:
+        g = self.graphs[st.request.graph]
+        key = st.request.group_key(g.fingerprint)
+        grp = self._groups.get(key)
+        if grp is None:
+            t = get_template(st.request.template)
+            eng = self.engine_cache.get(
+                g, st.request.template, st.request.engine,
+                st.request.plan, **self.engine_kw)
+            scale = 1.0 / (t.automorphisms * colorful_probability(t.k))
+            ledger_dir = os.path.join(
+                self.ledger_root,
+                f"{g.fingerprint[:12]}_{st.request.template}_"
+                f"{st.request.engine}_{st.request.plan}_s{st.request.seed}")
+            runner = EstimatorRunner(
+                engine_counter(eng, seed=st.request.seed,
+                               batch_size=self.batch_size),
+                k=t.k, automorphisms=t.automorphisms, n_iterations=None,
+                ledger_dir=ledger_dir,
+                checkpoint_every=self.checkpoint_every,
+                seed=st.request.seed)
+            # resume: ledgered contiguous prefix becomes instant history
+            led = runner.completed_iterations()
+            history: list[float] = []
+            while len(history) in led:
+                history.append(led[len(history)] * scale)
+            grp = _Group(key=key, graph_name=st.request.graph, runner=runner,
+                         engine=eng, scale=scale, history=history,
+                         cursor=len(history), members=[])
+            self._groups[key] = grp
+        else:
+            st.shared_group = True
+        grp.members.append(rid)
+        st.group_key = key
+        st.status = RequestStatus.RUNNING
+
+    def _satisfied(self, st: _ReqState) -> bool:
+        n = st.stat.n
+        if n >= st.cap:
+            return True
+        tgt = st.request.rel_stderr
+        return (tgt is not None and n >= min(st.request.min_iters, st.cap)
+                and st.stat.rel_stderr <= tgt)
+
+    def _retire(self, rid: str, st: _ReqState) -> None:
+        stat = st.stat
+        tgt = st.request.rel_stderr
+        st.status = RequestStatus.DONE
+        st.result = RequestResult(
+            estimate=stat.mean, stderr=stat.stderr,
+            rel_stderr=stat.rel_stderr, ci95=stat.ci95, iterations=stat.n,
+            target_met=(tgt is None or stat.rel_stderr <= tgt),
+            from_cache=False, shared_group=st.shared_group,
+            seconds=time.time() - st.t_submit)
+        g = self.graphs[st.request.graph]
+        ck = EstimateCache.key(g.fingerprint, st.request.template,
+                               st.request.engine, st.request.plan,
+                               st.request.seed)
+        prev = self.estimate_cache.get(ck)
+        if prev is None or prev["iterations"] < stat.n:
+            self.estimate_cache.put(ck, {
+                "estimate": stat.mean, "stderr": stat.stderr,
+                "rel_stderr": stat.rel_stderr, "iterations": stat.n})
+
+    def _consume_and_retire(self) -> None:
+        for rid, st in self._requests.items():
+            if st.status is not RequestStatus.RUNNING:
+                continue
+            grp = self._groups[st.group_key]
+            hi = min(len(grp.history), st.cap)
+            while st.consumed < hi:
+                st.stat.update(grp.history[st.consumed])
+                st.consumed += 1
+                if self._satisfied(st):
+                    break
+            if self._satisfied(st):
+                self._retire(rid, st)
+
+    def _live_members(self, grp: _Group) -> list[_ReqState]:
+        return [self._requests[rid] for rid in grp.members
+                if self._requests[rid].status is RequestStatus.RUNNING]
+
+    def step(self) -> int:
+        """One scheduling round; returns the number of live requests left.
+
+        Round shape: attach new requests to groups, let everyone consume
+        already-available samples (joins and ledger resumes often finish
+        right here, with zero device work), then extend each still-needed
+        group by one ``round_size`` batch — a single device dispatch per
+        group regardless of how many tenants share it — and consume again.
+        """
+        for rid, st in list(self._requests.items()):
+            if st.status is RequestStatus.PENDING:
+                try:
+                    self._attach(rid, st)
+                except Exception as exc:  # unknown engine/plan, build failure
+                    st.status = RequestStatus.FAILED
+                    st.error = f"{type(exc).__name__}: {exc}"
+        self._consume_and_retire()
+        for grp in self._groups.values():
+            live = self._live_members(grp)
+            if not live:
+                continue
+            # never dispatch past the last live member's remaining budget
+            # (every request has a cap — adaptive ones the service default)
+            need = max(m.cap - m.stat.n for m in live)
+            n_new = min(self.round_size, max(need, 1))
+            ids = list(range(grp.cursor, grp.cursor + n_new))
+            try:
+                per = grp.runner.run_iterations(ids)
+            except Exception as exc:
+                for m in live:
+                    m.status = RequestStatus.FAILED
+                    m.error = f"{type(exc).__name__}: {exc}"
+                continue
+            for i in ids:
+                grp.history.append(per[i] * grp.scale)
+            grp.cursor += n_new
+        self._consume_and_retire()
+        return sum(st.status in (RequestStatus.PENDING, RequestStatus.RUNNING)
+                   for st in self._requests.values())
+
+    def run(self, max_rounds: int = 100_000) -> dict[str, RequestResult]:
+        """Drive rounds until every request reaches a terminal status;
+        returns results for all DONE requests (keyed by request id)."""
+        for _ in range(max_rounds):
+            if self.step() == 0:
+                break
+        return {rid: st.result for rid, st in self._requests.items()
+                if st.result is not None}
+
+    # ------------------------------------------------------------- insight
+    def stats(self) -> dict:
+        """Service-level accounting: engine-cache behavior, group count,
+        unique device iterations vs. per-request iterations consumed."""
+        consumed = sum(st.result.iterations for st in self._requests.values()
+                       if st.result is not None and not st.from_cache)
+        return {
+            "requests": len(self._requests),
+            "groups": len(self._groups),
+            "engine_cache": self.engine_cache.stats(),
+            "unique_iterations": sum(g.cursor for g in self._groups.values()),
+            "consumed_iterations": consumed,
+        }

@@ -48,3 +48,59 @@ def test_comments_and_blank_lines(tmp_path):
         f.write("# header\n\n0 1\n1 2\n# trailing\n")
     g = load_edge_list(p)
     assert g.n == 3 and g.m == 4
+
+
+def test_fingerprint_is_content_identity():
+    g1 = erdos_renyi(40, 4.0, seed=5)
+    g2 = erdos_renyi(40, 4.0, seed=5)   # same content, fresh arrays
+    g3 = erdos_renyi(40, 4.0, seed=6)
+    assert g1.fingerprint == g2.fingerprint
+    assert g1.fingerprint != g3.fingerprint
+    assert len(g1.fingerprint) == 32
+    # padding changes vertex count -> different identity
+    assert g1.padded(64).fingerprint != g1.fingerprint
+
+
+def test_cached_loader_invalidates_on_source_rewrite(tmp_path):
+    g = erdos_renyi(40, 4.0, seed=4)
+    p = str(tmp_path / "g.txt")
+    save_edge_list(g, p)
+    assert load_cached(p).fingerprint == g.fingerprint
+
+    # rewrite the source with a different graph but force the cache file's
+    # mtime to stay newer — mtime ordering alone would (wrongly) keep it
+    g2 = erdos_renyi(40, 4.0, seed=7)
+    save_edge_list(g2, p)
+    cache = p + ".cache.npz"
+    os.utime(cache, (os.path.getmtime(p) + 100,) * 2)
+    assert load_cached(p).fingerprint == g2.fingerprint
+
+    # and a cache refreshed from the new source is reused, not rebuilt
+    mtime = os.path.getmtime(cache)
+    assert load_cached(p).fingerprint == g2.fingerprint
+    assert os.path.getmtime(cache) == mtime
+
+
+def test_cached_loader_rebuilds_corrupt_cache(tmp_path):
+    g = erdos_renyi(30, 3.0, seed=2)
+    p = str(tmp_path / "g.txt")
+    save_edge_list(g, p)
+    cache = p + ".cache.npz"
+    with open(cache, "wb") as f:          # truncated/garbage "cache"
+        f.write(b"PK\x03\x04 not a real zip")
+    os.utime(cache, (os.path.getmtime(p) + 100,) * 2)
+    assert load_cached(p).fingerprint == g.fingerprint
+    # and it was replaced with a valid cache
+    assert load_graph_npz(cache).fingerprint == g.fingerprint
+
+
+def test_npz_records_fingerprint_and_source(tmp_path):
+    g = erdos_renyi(30, 3.0, seed=1)
+    src = str(tmp_path / "g.txt")
+    save_edge_list(g, src)
+    p = str(tmp_path / "g.npz")
+    save_graph_npz(g, p, source=src)
+    z = np.load(p)
+    assert str(z["fingerprint"]) == g.fingerprint
+    assert int(z["src_size"]) == os.path.getsize(src)
+    assert load_graph_npz(p).fingerprint == g.fingerprint
