@@ -1,0 +1,112 @@
+"""Memory-aware executor benchmark: peak table bytes + throughput vs budget.
+
+Rows (benchmarks.common.emit):
+
+  memory/model/<tmpl>/<plan>            modeled bytes: keep-everything vs
+                                        liveness-scheduled peak (batch=1)
+  memory/budget/<tmpl>/<MiB>mb          estimator us/iteration at the
+                                        budget-derived batch size
+  memory/chunked/b12                    k=12 binary template under a budget
+                                        the unchunked executor exceeds
+
+``--smoke`` runs only the k=12 assertion (the CI step): the chunked path
+must complete — and match the unchunked result to 1e-6 — under a budget
+whose unchunked peak does not fit.
+"""
+
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import build_engine, get_template
+from repro.core import executor as ex
+from repro.core.templates import TreeTemplate
+from repro.graph import erdos_renyi, rmat
+
+BINARY12 = TreeTemplate([((i - 1) // 2, i) for i in range(1, 12)],
+                        name="b12")
+
+
+def _model_rows(tname: str) -> None:
+    t = get_template(tname)
+    for pname in ("dedup", "optimized"):
+        plan = {"dedup": t.plan_dedup, "optimized": t.plan_optimized}[pname]
+        n = 1 << 14                      # per-vertex-scaled reference size
+        keep = ex.keep_everything_bytes(plan, t.k, n)
+        sched = ex.compute_schedule(plan, t.k)
+        peak = ex.peak_table_bytes(plan, t.k, n, schedule=sched)
+        emit(f"memory/model/{tname}/{pname}", 0.0,
+             f"keepall_mb={keep / 2**20:.2f};peak_mb={peak / 2**20:.2f};"
+             f"saving={keep / max(peak, 1):.2f}x")
+
+
+def _budget_sweep(g, tname: str, budgets_mb, iters: int = 16) -> None:
+    t = get_template(tname)
+    for mb in budgets_mb:
+        e = build_engine(g, t, "pgbsc", plan="optimized",
+                         memory_budget_bytes=int(mb * 2 ** 20))
+        ids = list(range(iters))
+
+        def run_iters():
+            return e.count_iterations_batch(ids, seed=0)
+
+        sec = timeit(run_iters, warmup=1, iters=2)
+        emit(f"memory/budget/{tname}/{mb}mb", sec / iters * 1e6,
+             f"batch={e.batch_size};"
+             f"peak_mb={e.peak_table_bytes / 2**20:.2f};"
+             f"iters_per_s={iters / sec:.1f}")
+
+
+def smoke() -> int:
+    """CI assertion: k=12 completes under a budget the unchunked path
+    exceeds, matching the unchunked result to 1e-6 relative error."""
+    g = erdos_renyi(48, 3.0, seed=3)
+    plan = BINARY12.plan_dedup
+    ref = build_engine(g, BINARY12, "pgbsc", plan="dedup")
+    budget = 2200 * g.n * 4
+    unchunked_peak = ex.peak_table_bytes(plan, 12, g.n,
+                                         schedule=ref.schedule)
+    keep = ex.keep_everything_bytes(plan, 12, g.n)
+    assert keep > budget, "always-live walk must exceed the smoke budget"
+    assert unchunked_peak > budget, \
+        "unchunked executor must exceed the smoke budget"
+    e = build_engine(g, BINARY12, "pgbsc", plan="dedup",
+                     memory_budget_bytes=budget)
+    assert e.schedule.chunk_map, "budget must force colorset chunking"
+    assert e.exec_choice.fits and e.exec_choice.peak_bytes <= budget
+    from repro.graph.coloring import coloring_numpy
+    colors = coloring_numpy(0, 0, g.n, 12)
+    want = float(ref.count_colorful(colors)[0])
+    got = float(e.count_colorful(colors)[0])
+    rel = abs(got - want) / max(abs(want), 1e-30)
+    assert rel <= 1e-6, (got, want, rel)
+    print(f"memory smoke OK: k=12 b12 under {budget} bytes "
+          f"(keepall={keep}, unchunked_peak={unchunked_peak}, "
+          f"chunks={dict(e.schedule.chunk_map)}, rel_err={rel:.2e})")
+    return 0
+
+
+def run() -> None:
+    for tname in ("u7", "u10", "u12"):
+        _model_rows(tname)
+    g = rmat(10, 16, seed=0)
+    _budget_sweep(g, "u7", (0.5, 2, 8, 32))
+    # the chunked regime: a budget the unchunked b12 walk exceeds
+    gb = erdos_renyi(48, 3.0, seed=3)
+    e = build_engine(gb, BINARY12, "pgbsc", plan="dedup",
+                     memory_budget_bytes=2200 * gb.n * 4)
+    from repro.graph.coloring import coloring_numpy
+    colors = coloring_numpy(0, 0, gb.n, 12)
+    sec = timeit(lambda: e.count_colorful(colors)[0], warmup=1, iters=2)
+    emit("memory/chunked/b12", sec * 1e6,
+         f"chunks={len(e.schedule.chunk_map)};"
+         f"peak_mb={e.peak_table_bytes / 2**20:.3f}")
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        sys.exit(smoke())
+    run()

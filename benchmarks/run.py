@@ -23,6 +23,7 @@ BENCHES = {
     "fig14_error": "benchmarks.bench_error",
     "plans_beyond_paper": "benchmarks.bench_plans",
     "service": "benchmarks.bench_service",
+    "memory": "benchmarks.bench_memory",
 }
 
 

@@ -5,6 +5,9 @@ from repro.core.colorsets import (all_colorsets, colorful_probability,
                                   rank_colorset, split_tables,
                                   unrank_colorset)
 from repro.core.engines import ENGINES, CountingEngine, build_engine
+from repro.core.executor import (PlanExecutor, Schedule, compute_schedule,
+                                 keep_everything_bytes, peak_table_bytes,
+                                 pick_execution)
 from repro.core.oracle import (count_colorful_embeddings, count_embeddings,
                                count_subgraphs_exact)
 from repro.core.templates import (STANDARD_TEMPLATES, ExecutionPlan, PlanNode,
@@ -15,6 +18,8 @@ __all__ = [
     "all_colorsets", "colorful_probability", "rank_colorset",
     "split_tables", "unrank_colorset",
     "ENGINES", "CountingEngine", "build_engine",
+    "PlanExecutor", "Schedule", "compute_schedule",
+    "keep_everything_bytes", "peak_table_bytes", "pick_execution",
     "count_colorful_embeddings", "count_embeddings", "count_subgraphs_exact",
     "STANDARD_TEMPLATES", "ExecutionPlan", "PlanNode", "TreeTemplate",
     "get_template",

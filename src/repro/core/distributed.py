@@ -34,6 +34,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import colorsets as cs
+from repro.core import executor as pexec
 from repro.core.templates import TreeTemplate
 from repro.graph.structure import Graph
 
@@ -109,7 +110,8 @@ class DistributedPgbsc:
     """
 
     def __init__(self, g: Graph | None, template: TreeTemplate, mesh: Mesh,
-                 *, plan: str = "dedup", abstract_dims: dict | None = None):
+                 *, plan: str = "dedup", abstract_dims: dict | None = None,
+                 memory_budget_bytes: int | None = None):
         self.template = template
         self.k = template.k
         self.mesh = mesh
@@ -121,6 +123,11 @@ class DistributedPgbsc:
         self.plan = {"plain": template.plan, "dedup": template.plan_dedup,
                      "optimized": template.plan_optimized}[plan]
         self.abstract = g is None
+        self.memory_budget_bytes = memory_budget_bytes
+        # same liveness-managed, min-peak-ordered walk as the single-device
+        # engines; each freed buffer here is a model/data-sharded table
+        self.exec_schedule = pexec.compute_schedule(self.plan, self.k,
+                                                    passive_cache=True)
 
         if g is not None:
             ring = build_ring_edges(g, self.d_data)
@@ -224,31 +231,38 @@ class DistributedPgbsc:
 
     def _count_one(self, colors_loc: jnp.ndarray, src_l, dst_l, msk,
                    split_tabs: dict) -> jnp.ndarray:
-        """Inside shard_map: colors_loc (block,) for my data shard."""
+        """Inside shard_map: colors_loc (block,) for my data shard.
+
+        The plan walk itself (order, y-cache, buffer frees) is the shared
+        :class:`~repro.core.executor.PlanExecutor`; only the callbacks are
+        mesh-aware. Every table is stored model-sharded (my slice of the
+        padded combo rows), so each freed buffer releases its slice on all
+        model shards at once.
+        """
         k = self.k
         my_m = jax.lax.axis_index("model")
         leaf_full = (jnp.arange(k, dtype=jnp.int32)[:, None]
                      == colors_loc[None, :]).astype(jnp.float32)
-        # store every table model-sharded: my slice of padded combos
-        tables: list[jnp.ndarray | None] = [None] * len(self.meta)
-        y_cache: dict[int, jnp.ndarray] = {}
 
         def my_slice(full_pad: jnp.ndarray, width_pad: int) -> jnp.ndarray:
             rows = width_pad // self.d_model
             return jax.lax.dynamic_slice_in_dim(full_pad, my_m * rows, rows, 0)
 
-        for idx, node in enumerate(self.plan.nodes):
+        # all leaves are size-1 sub-templates: same width_pad, same table
+        leaf_meta = self.meta[next(
+            i for i, nd in enumerate(self.plan.nodes) if nd.is_leaf)]
+        pad = jnp.zeros((leaf_meta.width_pad - k, colors_loc.shape[0]),
+                        jnp.float32)
+        leaf_loc = my_slice(jnp.concatenate([leaf_full, pad], axis=0),
+                            leaf_meta.width_pad)
+
+        def passive_op(p_idx, m_p):
+            return self._ring_spmm(m_p, src_l, dst_l, msk)
+
+        def combine(idx, m_a_loc, y_p_loc):
+            node = self.plan.nodes[idx]
             meta = self.meta[idx]
-            if node.is_leaf:
-                pad = jnp.zeros((meta.width_pad - k, colors_loc.shape[0]),
-                                jnp.float32)
-                full = jnp.concatenate([leaf_full, pad], axis=0)
-                tables[idx] = my_slice(full, meta.width_pad)
-                continue
             ia, ip = split_tabs[idx]
-            if node.passive not in y_cache:
-                y_cache[node.passive] = self._ring_spmm(
-                    tables[node.passive], src_l, dst_l, msk)
             # adaptive collective choice per node (bytes moved over `model`):
             #  gather-both: move Ca_pad + Cp_pad rows;
             #  scatter-out:  move Cp_pad + S_pad rows (psum of partials).
@@ -258,19 +272,17 @@ class DistributedPgbsc:
             # psum costs ~2x an all-gather of the same rows (ring algebra),
             # unless XLA fuses the trailing slice into a reduce-scatter
             scatter_cost = p_pad + 2 * meta.width_pad
-            y_p_full = _allgather_rows(y_cache[node.passive], "model")
+            y_p_full = _allgather_rows(y_p_loc, "model")
             if scatter_cost < gather_cost:
-                tables[idx] = self._ema_scatter(
-                    tables[node.active], y_p_full, ia, ip,
-                    a_pad // self.d_model)
-            else:
-                m_a_full = _allgather_rows(tables[node.active], "model")
-                ia_my = my_slice(ia, meta.width_pad)
-                ip_my = my_slice(ip, meta.width_pad)
-                tables[idx] = self._ema_local(m_a_full, y_p_full,
-                                              ia_my, ip_my)
+                return self._ema_scatter(m_a_loc, y_p_full, ia, ip,
+                                         a_pad // self.d_model)
+            m_a_full = _allgather_rows(m_a_loc, "model")
+            ia_my = my_slice(ia, meta.width_pad)
+            ip_my = my_slice(ip, meta.width_pad)
+            return self._ema_local(m_a_full, y_p_full, ia_my, ip_my)
 
-        root = tables[-1]
+        runner = pexec.PlanExecutor(self.plan, self.exec_schedule)
+        root = runner.run(leaf_loc, passive_op=passive_op, combine=combine)
         root_meta = self.meta[-1]
         rows = root_meta.width_pad // self.d_model
         row_ids = my_m * rows + jnp.arange(rows)
@@ -360,19 +372,40 @@ class DistributedPgbsc:
             self._multi = (jax.jit(multi), (src_l, dst_l, msk))
         return self._multi
 
+    def default_pod_batch(self) -> int:
+        """Budget-derived pod rounds per device call.
+
+        Scanned rounds reuse buffers, so live memory does not grow with the
+        round count — but XLA may double-buffer the scan and larger calls
+        raise the blast radius of a preemption (the runner loses at most one
+        call's work). With a ``memory_budget_bytes`` the rounds scale with
+        the headroom over one iteration's modeled per-device peak; without
+        one, the historical default of 8 is kept.
+        """
+        if self.memory_budget_bytes is None:
+            return 8
+        shards = self.d_data * self.d_model
+        per_iter = pexec.simulate_peak_rows(
+            self.plan, self.k, self.exec_schedule) * self.n_pad * 4 // shards
+        return int(max(1, min(32, self.memory_budget_bytes
+                              // max(per_iter, 1))))
+
     def count_iterations(self, iterations: list[int], seed: int = 0,
-                         batch_size: int = 8) -> tuple[float, dict]:
+                         batch_size: int | None = None) -> tuple[float, dict]:
         """Sum of colorful counts over explicit iteration ids (for the
         fault-tolerant runner; single-process execution on whatever mesh).
 
         Per-pod work is batched: each device call evaluates up to
         ``batch_size`` coloring iterations per pod (a ``lax.scan`` over pod
         rounds inside the jit), so a checkpoint batch of
-        ``batch_size * n_pods`` iterations is one dispatch. Ragged tails are
-        padded with the last iteration id and discarded; per-iteration values
-        are independent of the grouping, preserving elastic-restart
-        determinism across mesh shapes AND batch sizes.
+        ``batch_size * n_pods`` iterations is one dispatch. ``None`` derives
+        the knob from ``memory_budget_bytes`` (:meth:`default_pod_batch`).
+        Ragged tails are padded with the last iteration id and discarded;
+        per-iteration values are independent of the grouping, preserving
+        elastic-restart determinism across mesh shapes AND batch sizes.
         """
+        if batch_size is None:
+            batch_size = self.default_pod_batch()
         n_pods = self.mesh.shape["pod"] if self.has_pod else 1
         # clamped to the pod-rounds actually needed: lax.scan serializes the
         # rounds, so padding a short checkpoint batch up to the knob would

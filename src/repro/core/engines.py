@@ -18,11 +18,17 @@ the paper's three performance regimes:
 
 Exact arithmetic would make them identical (paper §7.4); floating-point
 reassociation yields ~1e-6 relative differences, which the tests bound.
+
+All three engines execute their plan through the shared
+:class:`repro.core.executor.PlanExecutor`: one liveness-managed,
+min-peak-scheduled bottom-up walk, parameterized only by the passive
+transform (SpMM vs. hoisted neighbor sum vs. none) and the combine step.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from math import comb
 from typing import Callable
 
 import jax
@@ -30,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import colorsets as cs
+from repro.core import executor as pexec
 from repro.core.templates import ExecutionPlan, TreeTemplate
 from repro.graph.structure import Graph
 from repro.kernels.ema import ops as ema_ops
@@ -42,15 +49,31 @@ ENGINES = ("fascia", "pfascia", "pgbsc")
 
 @dataclasses.dataclass
 class WorkEstimate:
-    """Static op counts per engine run (used by benchmarks / roofline)."""
+    """Static op counts for ONE coloring (used by benchmarks/roofline).
+
+    All per-coloring fields share units, so flops/bytes ratios are valid
+    arithmetic intensities. ``table_bytes`` is dtype-aware (C(k,t) x N x
+    itemsize summed over internal plan nodes); ``batch`` records the
+    engine's dispatch batch size, and the ``dispatch_*`` properties give
+    the per-device-call totals.
+    """
 
     spmm_flops: int = 0
     ema_flops: int = 0
     table_bytes: int = 0
+    batch: int = 1
 
     @property
     def total_flops(self) -> int:
         return self.spmm_flops + self.ema_flops
+
+    @property
+    def dispatch_flops(self) -> int:
+        return self.total_flops * self.batch
+
+    @property
+    def dispatch_table_bytes(self) -> int:
+        return self.table_bytes * self.batch
 
 
 class CountingEngine:
@@ -59,6 +82,19 @@ class CountingEngine:
     Call :meth:`count_colorful` with an (n,) int32 coloring; returns the
     scalar sum over the root table (= alpha x #colorful copies) and the root
     table itself. :meth:`estimate` runs the full color-coding estimator.
+
+    Memory management
+    -----------------
+    Plan execution is scheduled by ``core/executor.py``: node tables and
+    cached SpMM results are freed at their statically computed last use and
+    the bottom-up walk is ordered to minimize the peak live table bytes.
+    A single ``memory_budget_bytes`` knob (default
+    ``executor.DEFAULT_MEMORY_BUDGET_BYTES``) is turned into the coloring
+    ``batch_size`` by the analytic memory model; when even one coloring
+    exceeds the budget (large k), the pgbsc SpMM/eMA switch to
+    colorset-chunked execution that splits the ``C(k, t_p)`` passive axis
+    so the neighbor-sum table is never materialized whole. Pass
+    ``batch_size`` explicitly to override the derived batch.
 
     Batching
     --------
@@ -74,8 +110,8 @@ class CountingEngine:
     host->device coloring transfers.
 
     ``batch_size`` bounds peak memory: a batch of B colorings holds, per live
-    plan node of size t, a ``B x C(k, t) x N`` float32 table (plus one SpMM
-    output of the same shape), so chunks of ``batch_size`` colorings are
+    plan node of size t, a ``B x C(k, t) x N`` table (plus one SpMM output
+    of the same shape), so chunks of ``batch_size`` colorings are
     dispatched at a time and ragged tails are padded to keep one compiled
     program shape. Batched results match the per-coloring path to ~1e-6
     relative error (floating-point reassociation only).
@@ -85,7 +121,8 @@ class CountingEngine:
                  spmm_method: str = "segment", use_pallas_ema: bool = False,
                  interpret: bool = True, dedup: bool = False,
                  plan: str | None = None, dtype=jnp.float32,
-                 batch_size: int = 16):
+                 batch_size: int | None = None,
+                 memory_budget_bytes: int | None = None):
         if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine!r}")
         self.g = g
@@ -93,7 +130,8 @@ class CountingEngine:
         self.engine = engine
         self.k = template.k
         self.dtype = dtype
-        self.batch_size = batch_size
+        self.spmm_method = spmm_method
+        self.memory_budget_bytes = memory_budget_bytes
         plan_name = plan or ("dedup" if dedup else "plain")
         self.plan: ExecutionPlan = {
             "plain": template.plan, "dedup": template.plan_dedup,
@@ -101,16 +139,44 @@ class CountingEngine:
         self.use_pallas_ema = use_pallas_ema
         self.interpret = interpret
 
-        if engine == "pgbsc":
-            self._spmm_prep = spmm_ops.prepare(g, spmm_method,
-                                               interpret=interpret)
+        # budget -> (derived batch size, liveness schedule, chunking); an
+        # explicit batch_size only overrides the batch, not the schedule
+        self.exec_choice = pexec.pick_execution(
+            self.plan, self.k, g.n,
+            memory_budget_bytes=memory_budget_bytes, dtype=dtype,
+            passive_cache=(engine != "fascia"),
+            allow_chunking=(engine == "pgbsc"))
+        self.schedule = self.exec_choice.schedule
+        self.batch_size = int(batch_size if batch_size is not None
+                              else self.exec_choice.batch_size)
+
+        self._materialize()
+        self.work = self._estimate_work()
+        # dispatch accounting (service/benchmark introspection): device calls
+        # through the batched pipeline and coloring rows computed by them
+        # (padding rows included — they are real device work)
+        self.n_batch_dispatches = 0
+        self.n_colorings_dispatched = 0
+
+    # -------------------------------------------------------- device state
+    def _materialize(self) -> None:
+        """Build device arrays and compiled callables (see :meth:`release`)."""
+        g = self.g
+        if self.engine == "pgbsc":
+            self._spmm_prep = spmm_ops.prepare(g, self.spmm_method,
+                                               interpret=self.interpret)
+            self._nbr = self._mask = None
         else:
             nbr, mask = g.ell()
+            self._spmm_prep = None
             self._nbr = jnp.asarray(nbr)
             self._mask = jnp.asarray(mask)
 
-        # Static split tables per internal plan node.
+        # Static split tables per internal plan node (+ chunked repacking
+        # for nodes the memory model decided to colorset-chunk).
         self._splits: dict[int, tuple[jnp.ndarray, jnp.ndarray]] = {}
+        self._chunk_packs: dict[int, ema_ops.ChunkedSplits] = {}
+        chunk_map = self.schedule.chunk_map
         for idx, node in enumerate(self.plan.nodes):
             if node.is_leaf:
                 continue
@@ -118,20 +184,47 @@ class CountingEngine:
             t_a = self.plan.nodes[node.active].size
             ia, ip = cs.split_tables(self.k, t, t_a)
             self._splits[idx] = (jnp.asarray(ia), jnp.asarray(ip))
+            q = chunk_map.get(idx, 1)
+            if q > 1:
+                self._chunk_packs[idx] = ema_ops.pack_chunked_splits(
+                    ia, ip, comb(self.k, t - t_a), q,
+                    pair_block=pexec.PAIR_BLOCK)
 
-        self.work = self._estimate_work()
         self._count_fn = jax.jit(self._build())
         self._batch_fn = None    # built lazily on first batched call
         self._seeded_fn = None   # jit(seed, iteration ids) -> batch totals
-        # dispatch accounting (service/benchmark introspection): device calls
-        # through the batched pipeline and coloring rows computed by them
-        # (padding rows included — they are real device work)
-        self.n_batch_dispatches = 0
-        self.n_colorings_dispatched = 0
+        self._released = False
+
+    def release(self) -> None:
+        """Drop device arrays and compiled executables.
+
+        Called by the service's :class:`~repro.service.cache.EngineCache`
+        on eviction so a bounded cache actually bounds device memory. The
+        engine stays usable: the next count call rebuilds lazily from the
+        host-side graph.
+        """
+        for name in ("_count_fn", "_batch_fn", "_seeded_fn"):
+            fn = getattr(self, name, None)
+            if fn is not None and hasattr(fn, "clear_cache"):
+                try:
+                    fn.clear_cache()
+                except Exception:
+                    pass
+        self._count_fn = self._batch_fn = self._seeded_fn = None
+        self._spmm_prep = None
+        self._nbr = self._mask = None
+        self._splits = {}
+        self._chunk_packs = {}
+        self._released = True
+
+    def _ensure(self) -> None:
+        if self._released:
+            self._materialize()
 
     # ------------------------------------------------------------------ api
     def count_colorful(self, colors: jax.Array) -> tuple[jax.Array, jax.Array]:
         """-> (sum over root table, root table)."""
+        self._ensure()
         return self._count_fn(jnp.asarray(colors))
 
     def count_colorful_batch(self, colorings: jax.Array,
@@ -140,10 +233,11 @@ class CountingEngine:
         """Batched :meth:`count_colorful` over a (B, n) coloring batch.
 
         -> (totals (B,), root tables (B, ...)). The batch is chunked to
-        ``batch_size`` (default: the engine's knob) colorings per device
-        call; ragged tails are padded with the last coloring (and sliced
-        off) so every chunk reuses one compiled program shape.
+        ``batch_size`` (default: the budget-derived knob) colorings per
+        device call; ragged tails are padded with the last coloring (and
+        sliced off) so every chunk reuses one compiled program shape.
         """
+        self._ensure()
         colorings = jnp.asarray(colorings)
         if colorings.ndim != 2:
             raise ValueError(f"expected (B, n) colorings, got "
@@ -184,6 +278,7 @@ class CountingEngine:
         bitwise independent of the batch composition, which keeps the
         fault-tolerant runner's resume-equals-straight invariant intact.
         """
+        self._ensure()
         its = [int(i) for i in iterations]
         if not its:
             return {}
@@ -262,40 +357,41 @@ class CountingEngine:
                 == colors[..., None, :]).astype(self.dtype)
 
     def _build_pgbsc(self) -> Callable:
-        plan, splits, prep = self.plan, self._splits, self._spmm_prep
+        splits, packs, prep = self._splits, self._chunk_packs, self._spmm_prep
+        runner = pexec.PlanExecutor(self.plan, self.schedule)
+
+        def passive_op(p_idx, m_p):
+            # SpMM over *all* passive color sets at once (Algorithm 4 l.3);
+            # with plan dedup, shared passive children reuse the result.
+            return spmm_ops.spmm(m_p, prep)
+
+        def combine(idx, m_a, y_p):
+            ia, ip = splits[idx]
+            return ema_ops.ema(
+                m_a, y_p, ia, ip,
+                use_pallas=self.use_pallas_ema, interpret=self.interpret)
+
+        def combine_direct(idx, m_a, m_p):
+            # colorset-chunked node: the passive SpMM output is produced
+            # and consumed one C(k, t_p)-axis slice at a time
+            return ema_ops.ema_chunked(m_a, m_p, packs[idx],
+                                       lambda m: spmm_ops.spmm(m, prep))
 
         def run(colors: jax.Array):
             # colors: (N,) or batched (B, N) — every step below is
             # polymorphic over the leading batch dimension.
             leaf = self._leaf_table_cn(colors)
-            tables: list[jnp.ndarray | None] = [None] * plan.n_nodes
-            y_cache: dict[int, jnp.ndarray] = {}
-            for idx, node in enumerate(plan.nodes):
-                if node.is_leaf:
-                    tables[idx] = leaf
-                    continue
-                ia, ip = splits[idx]
-                # SpMM over *all* passive color sets at once (Algorithm 4 l.3);
-                # with plan dedup, shared passive children reuse the result.
-                if node.passive not in y_cache:
-                    y_cache[node.passive] = spmm_ops.spmm(
-                        tables[node.passive], prep
-                    )
-                y_p = y_cache[node.passive]
-                m_a = tables[node.active]
-                tables[idx] = ema_ops.ema(
-                    m_a, y_p, ia, ip,
-                    use_pallas=self.use_pallas_ema, interpret=self.interpret,
-                )
-            root = tables[-1]
+            root = runner.run(leaf, passive_op=passive_op, combine=combine,
+                              combine_direct=combine_direct)
             return root.sum(axis=(-2, -1)), root
 
         return run
 
     def _build_rowmajor(self, pruned: bool) -> Callable:
         """FASCIA / PFASCIA: row-major (N, C) tables + ELL traversal."""
-        plan, splits = self.plan, self._splits
+        splits = self._splits
         nbr, mask = self._nbr, self._mask
+        runner = pexec.PlanExecutor(self.plan, self.schedule)
 
         def nbr_sum(m_cols: jnp.ndarray) -> jnp.ndarray:
             # m_cols: (N, R) -> out[i, r] = sum_d m_cols[nbr[i, d], r] * mask
@@ -307,38 +403,41 @@ class CountingEngine:
             acc, _ = jax.lax.scan(body, acc0, (nbr.T, mask.T))
             return acc
 
+        def passive_op(p_idx, m_p):
+            # PFASCIA: one neighbor sweep per distinct passive set.
+            return nbr_sum(m_p)
+
+        def combine(idx, m_a, y_p):
+            ia, ip = splits[idx]
+
+            def body(acc, idx_l):
+                ia_l, ip_l = idx_l
+                return acc + m_a[:, ia_l] * y_p[:, ip_l], None
+
+            acc0 = jnp.zeros((m_a.shape[0], ia.shape[0]), self.dtype)
+            acc, _ = jax.lax.scan(body, acc0, (ia.T, ip.T))
+            return acc
+
+        def combine_direct(idx, m_a, m_p):
+            # FASCIA: the neighbor sweep is *inside* the split loop —
+            # the redundancy of paper §3.1, preserved deliberately.
+            ia, ip = splits[idx]
+
+            def body(acc, idx_l):
+                ia_l, ip_l = idx_l
+                y_l = nbr_sum(m_p[:, ip_l])   # (N, S) sweep per split
+                return acc + m_a[:, ia_l] * y_l, None
+
+            acc0 = jnp.zeros((m_a.shape[0], ia.shape[0]), self.dtype)
+            acc, _ = jax.lax.scan(body, acc0, (ia.T, ip.T))
+            return acc
+
         def run(colors: jax.Array):
             leaf = self._leaf_table_cn(colors).T  # (N, k)
-            tables: list[jnp.ndarray | None] = [None] * plan.n_nodes
-            for idx, node in enumerate(plan.nodes):
-                if node.is_leaf:
-                    tables[idx] = leaf
-                    continue
-                ia, ip = splits[idx]
-                m_a, m_p = tables[node.active], tables[node.passive]
-                if pruned:
-                    # PFASCIA: one neighbor sweep per distinct passive set.
-                    y_p = nbr_sum(m_p)
-
-                    def body(acc, idx_l):
-                        ia_l, ip_l = idx_l
-                        return acc + m_a[:, ia_l] * y_p[:, ip_l], None
-
-                    acc0 = jnp.zeros((m_a.shape[0], ia.shape[0]), self.dtype)
-                    acc, _ = jax.lax.scan(body, acc0, (ia.T, ip.T))
-                    tables[idx] = acc
-                else:
-                    # FASCIA: the neighbor sweep is *inside* the split loop —
-                    # the redundancy of paper §3.1, preserved deliberately.
-                    def body(acc, idx_l):
-                        ia_l, ip_l = idx_l
-                        y_l = nbr_sum(m_p[:, ip_l])   # (N, S) sweep per split
-                        return acc + m_a[:, ia_l] * y_l, None
-
-                    acc0 = jnp.zeros((m_a.shape[0], ia.shape[0]), self.dtype)
-                    acc, _ = jax.lax.scan(body, acc0, (ia.T, ip.T))
-                    tables[idx] = acc
-            root = tables[-1]
+            root = runner.run(
+                leaf,
+                passive_op=None if not pruned else passive_op,
+                combine=combine, combine_direct=combine_direct)
             return root.sum(), root
 
         return run
@@ -348,10 +447,15 @@ class CountingEngine:
     def flops_per_iteration(self) -> int:
         return self.work.total_flops
 
+    @property
+    def peak_table_bytes(self) -> int:
+        """Modeled peak live table bytes of one batched dispatch."""
+        return self.exec_choice.peak_bytes_per_coloring * self.batch_size
+
     def _estimate_work(self) -> WorkEstimate:
-        from math import comb
-        w = WorkEstimate()
+        w = WorkEstimate(batch=max(1, self.batch_size))
         n, e, k = self.g.n, self.g.m, self.k
+        itemsize = jnp.dtype(self.dtype).itemsize
         for idx, node in enumerate(self.plan.nodes):
             if node.is_leaf:
                 continue
@@ -364,7 +468,7 @@ class CountingEngine:
             else:
                 w.spmm_flops += e * comb(k, t_p)
             w.ema_flops += 2 * n * n_sets * n_splits
-            w.table_bytes += 4 * n * n_sets
+            w.table_bytes += itemsize * n * n_sets
         return w
 
 

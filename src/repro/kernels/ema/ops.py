@@ -8,12 +8,16 @@ paper Algorithm 4 line 7. The Pallas path keeps child tables resident in VMEM
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.ema.pallas_ema import ema_pallas
 
-__all__ = ["ema", "ema_xla", "ema_flops"]
+__all__ = ["ema", "ema_xla", "ema_chunked", "pack_chunked_splits",
+           "ChunkedSplits", "ema_flops"]
 
 # VMEM budget for the Pallas path: both child tables + out block.
 _PALLAS_VMEM_BYTES = 12 * 2 ** 20
@@ -51,6 +55,108 @@ def ema(m_a: jnp.ndarray, y_p: jnp.ndarray, ia: jnp.ndarray, ip: jnp.ndarray,
 def _fits_vmem(m_a, y_p) -> bool:
     resident = (m_a.shape[-2] + y_p.shape[-2]) * _PALLAS_N_BLOCK * 4
     return resident < _PALLAS_VMEM_BYTES
+
+
+# ------------------------------------------------------------------ chunked
+@dataclasses.dataclass(frozen=True)
+class ChunkedSplits:
+    """Static pair tables for the colorset-chunked eMA of one plan node.
+
+    The (color set, split) pairs of the node's ``(IA, IP)`` tables are
+    grouped by which passive-axis chunk their ``IP`` rank falls in, so each
+    chunk's pairs can be applied the moment that slice of the SpMM output
+    exists. All arrays are ``(n_chunks, pairs_pad)`` with ``pairs_pad`` a
+    multiple of ``pair_block`` (padding pairs have mask 0).
+    """
+
+    out_idx: np.ndarray    # output color-set rank of each pair
+    a_idx: np.ndarray      # active-child rank
+    p_loc: np.ndarray      # passive rank, local to the chunk
+    mask: np.ndarray       # 1.0 for real pairs
+    n_chunks: int
+    chunk_rows: int        # passive rows per chunk (last chunk padded)
+    n_out_rows: int        # C(k, t)
+    pair_block: int
+
+
+def pack_chunked_splits(ia, ip, n_passive_rows: int, n_chunks: int,
+                        pair_block: int = 128) -> ChunkedSplits:
+    """Host-side regrouping of split tables for :func:`ema_chunked`."""
+    ia = np.asarray(ia)
+    ip = np.asarray(ip)
+    s, l = ia.shape
+    r = -(-n_passive_rows // n_chunks)
+    jj = np.repeat(np.arange(s, dtype=np.int32), l)
+    aa = ia.ravel().astype(np.int32)
+    pp = ip.ravel().astype(np.int32)
+    q_of = pp // r
+    counts = np.bincount(q_of, minlength=n_chunks)
+    p_max = int(counts.max()) if len(counts) else 1
+    p_pad = max(pair_block, -(-p_max // pair_block) * pair_block)
+    out_idx = np.zeros((n_chunks, p_pad), np.int32)
+    a_idx = np.zeros((n_chunks, p_pad), np.int32)
+    p_loc = np.zeros((n_chunks, p_pad), np.int32)
+    mask = np.zeros((n_chunks, p_pad), np.float32)
+    order = np.argsort(q_of, kind="stable")
+    offs = np.concatenate([[0], np.cumsum(counts)])
+    for q in range(n_chunks):
+        sel = order[offs[q]: offs[q + 1]]
+        m = len(sel)
+        out_idx[q, :m] = jj[sel]
+        a_idx[q, :m] = aa[sel]
+        p_loc[q, :m] = pp[sel] - q * r
+        mask[q, :m] = 1.0
+    return ChunkedSplits(out_idx=out_idx, a_idx=a_idx, p_loc=p_loc,
+                         mask=mask, n_chunks=n_chunks, chunk_rows=r,
+                         n_out_rows=s, pair_block=pair_block)
+
+
+def ema_chunked(m_a: jnp.ndarray, m_p: jnp.ndarray, pack: ChunkedSplits,
+                spmm_fn) -> jnp.ndarray:
+    """eMA that never materializes the full passive SpMM output.
+
+    ``spmm_fn(chunk)`` maps a ``(chunk_rows, N)`` slice of the passive
+    table to its neighbor sums; the scan walks the ``C(k, t_p)`` axis one
+    chunk at a time, applying that chunk's (active, passive, out) pairs in
+    ``pair_block``-sized scatter-adds. Peak extra memory is one passive
+    chunk + one pair block instead of the whole ``C(k, t_p) x N`` table.
+    Matches the unchunked path to float reassociation (~1e-6 relative).
+    """
+    if m_a.ndim > 2:
+        # batched colorings: serialize batch elements inside the device call
+        # (chunked nodes only run when memory is the binding constraint)
+        return jax.lax.map(
+            lambda xy: ema_chunked(xy[0], xy[1], pack, spmm_fn),
+            (m_a, m_p))
+    n = m_a.shape[-1]
+    from repro.kernels.spmm.ops import spmm_row_chunks
+    m_p_chunks = spmm_row_chunks(m_p, pack.n_chunks)    # (Q, R, N)
+    pb = pack.pair_block
+    n_blocks = pack.out_idx.shape[1] // pb
+    oj = jnp.asarray(pack.out_idx)
+    ai = jnp.asarray(pack.a_idx)
+    pl = jnp.asarray(pack.p_loc)
+    mk = jnp.asarray(pack.mask, m_a.dtype)
+
+    def chunk_body(acc, xs):
+        m_p_c, oj_c, ai_c, pl_c, mk_c = xs
+        y = spmm_fn(m_p_c)                              # (R, N)
+
+        def pair_body(acc2, ys):
+            o, a, p, w = ys
+            term = jnp.take(m_a, a, axis=0) * jnp.take(y, p, axis=0) \
+                * w[:, None]
+            return acc2.at[o].add(term), None
+
+        acc, _ = jax.lax.scan(
+            pair_body, acc,
+            (oj_c.reshape(n_blocks, pb), ai_c.reshape(n_blocks, pb),
+             pl_c.reshape(n_blocks, pb), mk_c.reshape(n_blocks, pb)))
+        return acc, None
+
+    acc0 = jnp.zeros((pack.n_out_rows, n), m_a.dtype)
+    acc, _ = jax.lax.scan(chunk_body, acc0, (m_p_chunks, oj, ai, pl, mk))
+    return acc
 
 
 def ema_flops(n: int, s: int, l: int) -> int:

@@ -25,7 +25,7 @@ from repro.graph.structure import Graph
 from repro.kernels.spmm.pallas_bsr import spmm_bsr_pallas
 from repro.kernels.spmm.pallas_gather import spmm_gather_pallas
 
-__all__ = ["prepare", "spmm", "SpmmPrep", "METHODS"]
+__all__ = ["prepare", "spmm", "spmm_row_chunks", "SpmmPrep", "METHODS"]
 
 METHODS = ("segment", "ell", "dense", "pallas_gather", "pallas_bsr")
 
@@ -153,6 +153,23 @@ def spmm(m: jnp.ndarray, prep: SpmmPrep) -> jnp.ndarray:
             c_block=_pick_c_block(m.shape[0]), interpret=st["interpret"],
         )
     return out[:, : m.shape[1]]
+
+
+def spmm_row_chunks(m: jnp.ndarray, n_chunks: int) -> jnp.ndarray:
+    """Split the combination-row axis for the colorset-chunked executor path.
+
+    Returns ``(n_chunks, rows_per_chunk, N)`` with zero-padded tail rows;
+    each chunk is a self-contained SpMM operand (rows are independent), so
+    the chunked eMA can scan ``spmm(chunk, prep)`` without ever holding the
+    full ``C(k, t_p) x N`` neighbor-sum table.
+    """
+    c, n = m.shape[-2], m.shape[-1]
+    r = -(-c // n_chunks)
+    pad = n_chunks * r - c
+    if pad:
+        width = [(0, 0)] * (m.ndim - 2) + [(0, pad), (0, 0)]
+        m = jnp.pad(m, width)
+    return m.reshape(m.shape[:-2] + (n_chunks, r, n))
 
 
 def _pick_c_block(c: int) -> int:

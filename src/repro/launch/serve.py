@@ -20,6 +20,7 @@ import json
 
 from repro.graph import erdos_renyi, rmat
 from repro.service import CountingService, CountRequest
+from repro.service.cache import DEFAULT_MAX_ENTRIES, EngineCache
 
 
 def _load_graph(spec: str, edge_list: str | None):
@@ -52,16 +53,30 @@ def main(argv=None):
     ap.add_argument("--plan", default="optimized",
                     choices=["plain", "dedup", "optimized"])
     ap.add_argument("--round-size", type=int, default=8)
-    ap.add_argument("--batch-size", type=int, default=None)
+    ap.add_argument("--batch-size", type=int, default=None,
+                    help="dispatch batch override (default: derived from "
+                         "the memory budget by the executor's memory model)")
+    ap.add_argument("--memory-budget-mb", type=float, default=None,
+                    help="per-engine device table budget in MiB; sets the "
+                         "dispatch batch size and, for large templates, "
+                         "colorset-chunked execution")
+    ap.add_argument("--engine-cache-size", type=int,
+                    default=DEFAULT_MAX_ENTRIES,
+                    help="max resident engines; evicted engines release "
+                         "their device arrays and compiled fns")
     args = ap.parse_args(argv)
 
     g = _load_graph(args.graph, args.edge_list)
     print(f"serving graph: n={g.n} edge-slots={g.m} "
           f"avg_deg={g.avg_degree:.1f} fingerprint={g.fingerprint[:12]}")
 
+    budget = None if args.memory_budget_mb is None \
+        else int(args.memory_budget_mb * 2 ** 20)
     svc = CountingService(
         ledger_root=args.ledger, round_size=args.round_size,
         default_max_iters=args.iters, batch_size=args.batch_size,
+        memory_budget_bytes=budget,
+        engine_cache=EngineCache(max_entries=args.engine_cache_size),
         estimate_cache=args.results_cache)
     svc.add_graph("g", g)
     rids = []

@@ -28,21 +28,31 @@ from repro.graph.structure import Graph
 __all__ = ["EngineCache", "EstimateCache"]
 
 
+DEFAULT_MAX_ENTRIES = 8
+
+
 class EngineCache:
     """LRU cache of built :class:`CountingEngine` instances.
 
-    ``max_entries`` bounds resident engines (each holds device-side graph
-    formats and compiled executables); None means unbounded. ``hits`` /
-    ``misses`` count lookups, ``builds`` counts actual constructions —
-    the service surfaces these so "no second engine build" is observable.
+    ``max_entries`` bounds resident engines — each holds device-side graph
+    formats and compiled executables, so an unbounded cache is an unbounded
+    device-memory leak under multi-tenant traffic. The default keeps 8;
+    pass ``None`` explicitly for the old unbounded behavior. Eviction calls
+    the engine's :meth:`~repro.core.engines.CountingEngine.release`, which
+    actually drops its device arrays and clears its jitted executables (an
+    evicted engine that a caller still holds rebuilds lazily on next use).
+    ``hits`` / ``misses`` count lookups, ``builds`` counts constructions,
+    ``evictions`` counts released engines — the service surfaces these so
+    "no second engine build" and "bounded residency" are both observable.
     """
 
-    def __init__(self, max_entries: int | None = None):
+    def __init__(self, max_entries: int | None = DEFAULT_MAX_ENTRIES):
         self.max_entries = max_entries
         self._engines: OrderedDict[tuple, CountingEngine] = OrderedDict()
         self.hits = 0
         self.misses = 0
         self.builds = 0
+        self.evictions = 0
 
     @staticmethod
     def key(g: Graph, template: str, engine: str, plan: str,
@@ -64,15 +74,25 @@ class EngineCache:
         self._engines[k] = eng
         if self.max_entries is not None:
             while len(self._engines) > self.max_entries:
-                self._engines.popitem(last=False)
+                _, old = self._engines.popitem(last=False)
+                if hasattr(old, "release"):
+                    old.release()
+                self.evictions += 1
         return eng
+
+    def resident_ids(self) -> set[int]:
+        """``id()`` of cache-managed engine objects — the set whose device
+        residency ``max_entries`` bounds (used by the service to avoid
+        releasing engines that are still cache-warm)."""
+        return {id(e) for e in self._engines.values()}
 
     def __len__(self) -> int:
         return len(self._engines)
 
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
-                "builds": self.builds, "resident": len(self._engines)}
+                "builds": self.builds, "evictions": self.evictions,
+                "resident": len(self._engines)}
 
 
 class EstimateCache:

@@ -95,7 +95,13 @@ class CountingService:
         hard bound that keeps zero-count or high-variance queries finite.
     batch_size:
         Engine chunking knob forwarded to ``engine_counter`` (None = the
-        engine's own default).
+        engine's budget-derived default).
+    memory_budget_bytes:
+        Per-engine device-memory budget forwarded to every engine build
+        (part of the engine-cache key): the executor's memory model turns
+        it into the dispatch batch size — and into colorset-chunked
+        execution for templates whose single-coloring footprint already
+        exceeds it. None = the executor default budget.
     engine_kw:
         Extra build options forwarded to every engine construction (e.g.
         ``spmm_method``); part of the engine-cache key.
@@ -107,6 +113,7 @@ class CountingService:
                  round_size: int = 8, default_max_iters: int = 256,
                  checkpoint_every: int | None = None,
                  batch_size: int | None = None,
+                 memory_budget_bytes: int | None = None,
                  engine_kw: dict | None = None):
         self.ledger_root = ledger_root or tempfile.mkdtemp(
             prefix="pgbsc_service_")
@@ -123,6 +130,9 @@ class CountingService:
         self.checkpoint_every = checkpoint_every or self.round_size
         self.batch_size = batch_size
         self.engine_kw = dict(engine_kw or {})
+        if memory_budget_bytes is not None:
+            self.engine_kw["memory_budget_bytes"] = int(memory_budget_bytes)
+        self.memory_budget_bytes = memory_budget_bytes
         self.graphs: dict[str, Graph] = {}
         self._requests: dict[str, _ReqState] = {}
         self._groups: dict[tuple, _Group] = {}
@@ -303,8 +313,33 @@ class CountingService:
                 grp.history.append(per[i] * grp.scale)
             grp.cursor += n_new
         self._consume_and_retire()
+        self._release_idle_engines()
         return sum(st.status in (RequestStatus.PENDING, RequestStatus.RUNNING)
                    for st in self._requests.values())
+
+    def _release_idle_engines(self) -> None:
+        """Release device arrays of engines that only idle groups pin.
+
+        Groups are kept forever (their sample history serves late joiners
+        instantly), but a retired group must not keep an engine's device
+        arrays and compiled executables resident after the bounded
+        :class:`EngineCache` evicted it — otherwise device memory grows
+        with every distinct group ever seen regardless of the cache bound.
+        Engines still cache-resident stay warm (repeated requests keep the
+        no-rebuild/no-recompile guarantee); engines used by any live group
+        are left alone; a late joiner to an idle group re-materializes its
+        engine lazily.
+        """
+        keep = self.engine_cache.resident_ids() \
+            if hasattr(self.engine_cache, "resident_ids") else set()
+        keep |= {id(grp.engine) for grp in self._groups.values()
+                 if self._live_members(grp)}
+        for grp in self._groups.values():
+            eng = grp.engine
+            if id(eng) in keep or not hasattr(eng, "release"):
+                continue
+            if not getattr(eng, "_released", True):
+                eng.release()
 
     def run(self, max_rounds: int = 100_000) -> dict[str, RequestResult]:
         """Drive rounds until every request reaches a terminal status;

@@ -1,0 +1,265 @@
+"""Memory-aware plan executor: equivalence, liveness safety, memory model.
+
+The executor refactor must be invisible to results: every engine x plan x
+batched/single combination still matches the exact oracle / the unchunked
+path to float-reassociation error. The memory model must be sound: the
+schedule never frees a table before its last consumer, measured peak live
+table bytes stay under the model's prediction, and the budget knob actually
+changes what runs (batch sizes, colorset chunking for k=12).
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import build_engine, count_colorful_embeddings, get_template
+from repro.core import executor as ex
+from repro.core.templates import TreeTemplate
+from repro.graph import erdos_renyi
+from repro.graph.coloring import coloring_numpy
+from repro.kernels.ema import ops as ema_ops
+from repro.kernels.spmm import ops as spmm_ops
+
+ENGINES = ("fascia", "pfascia", "pgbsc")
+PLANS = ("plain", "dedup", "optimized")
+
+# Binary tree on 12 vertices: the k=12 template whose wide passive subtrees
+# make the SpMM output the memory hog (the colorset-chunking target).
+BINARY12 = TreeTemplate([((i - 1) // 2, i) for i in range(1, 12)],
+                        name="b12")
+
+
+def _graph(n=18, deg=3.5, seed=10):
+    return erdos_renyi(n, deg, seed=seed)
+
+
+class TestExecutorEquivalence:
+    """All 3 engines x 3 plans, single and batched, vs the exact oracle.
+
+    Counts stay < 2^24 so float32 sums of integers are exact; the oracle
+    comparison is therefore the strongest possible pre-refactor check."""
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    @pytest.mark.parametrize("plan", PLANS)
+    def test_single_matches_oracle(self, engine, plan):
+        g = _graph()
+        t = get_template("u5")
+        colors = coloring_numpy(0, 0, g.n, t.k)
+        oracle = count_colorful_embeddings(g, t, colors)
+        e = build_engine(g, t, engine, plan=plan)
+        total, root = e.count_colorful(colors)
+        assert float(total) == oracle, (engine, plan)
+        assert not np.isnan(np.asarray(root)).any()
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    @pytest.mark.parametrize("plan", PLANS)
+    def test_batched_matches_single(self, engine, plan):
+        g = _graph()
+        t = get_template("u5")
+        colorings = np.stack([coloring_numpy(3, i, g.n, t.k)
+                              for i in range(5)])
+        e = build_engine(g, t, engine, plan=plan)
+        per = [float(e.count_colorful(c)[0]) for c in colorings]
+        tot, _ = e.count_colorful_batch(jnp.asarray(colorings), batch_size=2)
+        np.testing.assert_allclose(np.asarray(tot), per, rtol=1e-6)
+
+
+def _check_schedule_safety(plan, sched):
+    """No table/y entry is consumed after its scheduled free; root survives;
+    everything else is eventually freed (no silent keep-alives)."""
+    root = plan.n_nodes - 1
+    chunks = sched.chunk_map
+    avail: set[int] = set()
+    y_avail: set[int] = set()
+    freed_tables: set[int] = set()
+    freed_y: set[int] = set()
+    for step, idx in enumerate(sched.order):
+        node = plan.nodes[idx]
+        if not node.is_leaf:
+            assert node.active in avail, f"active of {idx} freed too early"
+            direct = (not sched.passive_cache) or chunks.get(idx, 1) > 1
+            if direct:
+                assert node.passive in avail, \
+                    f"passive of {idx} freed too early"
+            elif node.passive not in y_avail:
+                assert node.passive in avail, \
+                    f"passive of {idx} freed before its SpMM"
+                y_avail.add(node.passive)
+        avail.add(idx)
+        for i in sched.free_tables[step]:
+            assert i != root, "root table must never be freed"
+            avail.discard(i)
+            freed_tables.add(i)
+        for p in sched.free_y[step]:
+            y_avail.discard(p)
+            freed_y.add(p)
+    assert root in avail
+    assert freed_tables == set(range(plan.n_nodes)) - {root}, \
+        "liveness must retire every non-root table"
+    assert not y_avail, "every y-cache entry must be retired"
+
+
+class TestLivenessSafety:
+    @pytest.mark.parametrize("tname", ["u5", "u7", "u10", "u13"])
+    @pytest.mark.parametrize("plan_name", PLANS)
+    @pytest.mark.parametrize("passive_cache", [True, False])
+    def test_never_frees_before_last_use(self, tname, plan_name,
+                                         passive_cache):
+        t = get_template(tname)
+        plan = {"plain": t.plan, "dedup": t.plan_dedup,
+                "optimized": t.plan_optimized}[plan_name]
+        for mode in ("program", "greedy", "auto"):
+            sched = ex.compute_schedule(plan, t.k,
+                                        passive_cache=passive_cache,
+                                        order_mode=mode)
+            _check_schedule_safety(plan, sched)
+
+    def test_chunked_schedule_safety(self):
+        plan = BINARY12.plan_dedup
+        internal = [i for i, nd in enumerate(plan.nodes) if not nd.is_leaf]
+        sched = ex.compute_schedule(plan, 12, chunks={internal[-1]: 4})
+        _check_schedule_safety(plan, sched)
+
+    def test_rejects_non_topological_order(self):
+        plan = get_template("u5").plan
+        with pytest.raises(ValueError):
+            ex.liveness(plan, tuple(reversed(range(plan.n_nodes))))
+
+
+class TestMemoryModel:
+    @pytest.mark.parametrize("tname", ["u5", "u7", "u10"])
+    def test_measured_peak_le_model(self, tname):
+        """Eagerly run the executor with the engine's own callbacks and a
+        live-bytes probe; the analytic model must be an upper bound."""
+        g = _graph(24, 3.0, seed=1)
+        t = get_template(tname)
+        e = build_engine(g, t, "pgbsc", plan="optimized")
+        colors = jnp.asarray(coloring_numpy(0, 0, g.n, t.k))
+        model = ex.peak_table_bytes(e.plan, t.k, g.n, batch=1,
+                                    dtype=np.float32, schedule=e.schedule)
+        peaks = []
+        runner = ex.PlanExecutor(e.plan, e.schedule)
+        prep = e._spmm_prep
+        root = runner.run(
+            e._leaf_table_cn(colors),
+            passive_op=lambda p, m: spmm_ops.spmm(m, prep),
+            combine=lambda i, a, y: ema_ops.ema(a, y, *e._splits[i]),
+            on_step=lambda step, nbytes: peaks.append(nbytes))
+        assert float(root.sum()) == count_colorful_embeddings(
+            g, t, np.asarray(colors))
+        assert max(peaks) <= model, (max(peaks), model)
+
+    def test_liveness_beats_keep_everything_2x_on_u10(self):
+        t = get_template("u10")
+        plan = t.plan_optimized
+        sched = ex.compute_schedule(plan, t.k)
+        keep = ex.keep_everything_bytes(plan, t.k, n=1)
+        managed = ex.peak_table_bytes(plan, t.k, n=1, schedule=sched)
+        assert keep >= 2 * managed, (keep, managed)
+
+    def test_budget_to_batch_monotone(self):
+        t = get_template("u5")
+        plan = t.plan_dedup
+        n = 100
+        per1 = ex.peak_table_bytes(plan, t.k, n)
+        prev = 0
+        for mult in (1, 3, 7, 16):
+            ch = ex.pick_execution(plan, t.k, n,
+                                   memory_budget_bytes=per1 * mult)
+            assert ch.fits
+            assert ch.batch_size == mult  # largest B with B * peak <= budget
+            assert ch.batch_size * ch.peak_bytes_per_coloring \
+                <= ch.budget_bytes
+            assert ch.batch_size >= prev
+            prev = ch.batch_size
+        capped = ex.pick_execution(plan, t.k, n,
+                                   memory_budget_bytes=per1 * 10_000)
+        assert capped.batch_size == ex.MAX_AUTO_BATCH
+
+    def test_batch_scales_model_linearly(self):
+        plan = get_template("u7").plan_dedup
+        one = ex.peak_table_bytes(plan, 7, 50, batch=1)
+        four = ex.peak_table_bytes(plan, 7, 50, batch=4)
+        assert four == 4 * one
+
+
+class TestColorsetChunking:
+    """Acceptance: a k=12 template counts under a budget where both the
+    always-live executor and the liveness-managed unchunked path exceed it,
+    matching the unchunked result to ~1e-6."""
+
+    def test_k12_under_budget_unchunked_cannot(self):
+        g = erdos_renyi(48, 3.0, seed=3)
+        plan = BINARY12.plan_dedup
+        ref = build_engine(g, BINARY12, "pgbsc", plan="dedup")
+        assert not ref.schedule.chunk_map       # default budget: unchunked
+        budget = 2200 * g.n * 4                 # rows x N x itemsize
+        assert ex.keep_everything_bytes(plan, 12, g.n) > budget
+        assert ex.peak_table_bytes(plan, 12, g.n,
+                                   schedule=ref.schedule) > budget
+        e = build_engine(g, BINARY12, "pgbsc", plan="dedup",
+                         memory_budget_bytes=budget)
+        assert e.batch_size == 1
+        assert e.schedule.chunk_map, "budget must force colorset chunking"
+        assert e.exec_choice.fits
+        assert e.exec_choice.peak_bytes <= budget
+        colors = coloring_numpy(0, 0, g.n, 12)
+        want, _ = ref.count_colorful(colors)
+        got, _ = e.count_colorful(colors)
+        np.testing.assert_allclose(float(got), float(want), rtol=1e-6)
+
+    def test_chunked_batched_matches(self):
+        g = erdos_renyi(30, 3.0, seed=5)
+        plan = BINARY12.plan_dedup
+        budget = 2200 * g.n * 4
+        e = build_engine(g, BINARY12, "pgbsc", plan="dedup",
+                         memory_budget_bytes=budget)
+        assert e.schedule.chunk_map
+        ref = build_engine(g, BINARY12, "pgbsc", plan="dedup")
+        per = ref.count_iterations_batch([0, 1, 2], seed=7)
+        got = e.count_iterations_batch([0, 1, 2], seed=7)
+        for it in per:
+            assert got[it] == pytest.approx(per[it], rel=1e-6)
+
+
+class TestWorkEstimate:
+    def test_table_bytes_dtype_and_batch_aware(self):
+        g = _graph()
+        t = get_template("u5")
+        base = build_engine(g, t, "pgbsc", batch_size=4)
+        twice_batch = build_engine(g, t, "pgbsc", batch_size=8)
+        half_dtype = build_engine(g, t, "pgbsc", batch_size=4,
+                                  dtype=jnp.float16)
+        # per-coloring fields share units (valid flops/bytes ratios) ...
+        assert twice_batch.work.table_bytes == base.work.table_bytes
+        assert twice_batch.work.total_flops == base.work.total_flops
+        assert half_dtype.work.table_bytes == base.work.table_bytes // 2
+        # ... and the dispatch_* properties carry the batch dimension
+        assert base.work.batch == 4 and twice_batch.work.batch == 8
+        assert twice_batch.work.dispatch_table_bytes \
+            == 2 * base.work.dispatch_table_bytes
+        assert twice_batch.work.dispatch_flops == 2 * base.work.dispatch_flops
+
+
+class TestEngineRelease:
+    def test_eviction_releases_and_engine_rebuilds(self):
+        from repro.service.cache import EngineCache
+        g = _graph(seed=2)
+        t = get_template("u3")
+        colors = coloring_numpy(0, 0, g.n, t.k)
+        cache = EngineCache(max_entries=1)
+        e1 = cache.get(g, "u3")
+        want = float(e1.count_colorful(colors)[0])
+        cache.get(g, "path4")                    # evicts + releases u3
+        assert cache.evictions == 1
+        assert e1._released
+        assert e1._spmm_prep is None and e1._count_fn is None
+        # a held reference to an evicted engine lazily re-materializes
+        assert float(e1.count_colorful(colors)[0]) == want
+        assert not e1._released
+
+    def test_default_cache_is_bounded(self):
+        from repro.service.cache import EngineCache, DEFAULT_MAX_ENTRIES
+        assert EngineCache().max_entries == DEFAULT_MAX_ENTRIES
+        assert EngineCache(max_entries=None).max_entries is None

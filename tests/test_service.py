@@ -58,7 +58,7 @@ class TestEngineCache:
         g3 = _graph(seed=2)     # different content
         e1 = cache.get(g1, "u3")
         assert cache.stats() == {"hits": 0, "misses": 1, "builds": 1,
-                                 "resident": 1}
+                                 "evictions": 0, "resident": 1}
         assert cache.get(g2, "u3") is e1          # content hash, not identity
         assert cache.get(g1, "u3", plan="plain") is not e1
         assert cache.get(g3, "u3") is not e1
@@ -84,6 +84,32 @@ class TestEngineCache:
         svc.run()
         assert svc.engine_cache.stats()["builds"] == 1
         assert svc.stats()["groups"] == 1
+
+    def test_idle_groups_release_engine_device_state(self, tmp_path):
+        """Retired groups keep their sample history (late joiners) but must
+        not pin device arrays of engines the bounded cache evicted; engines
+        still cache-resident stay warm for repeated requests."""
+        svc = _svc(tmp_path, engine_cache=EngineCache(max_entries=1))
+        svc.add_graph("g", _graph())
+        r1 = svc.submit(CountRequest("g", "u3", max_iters=4))
+        svc.run()
+        (grp_u3,) = svc._groups.values()
+        # cache-resident: idle group must NOT release (warm repeats)
+        assert not grp_u3.engine._released
+        r2 = svc.submit(CountRequest("g", "path4", max_iters=4))
+        svc.run()
+        assert svc._requests[r2].status is RequestStatus.DONE
+        # u3 engine was evicted by the 1-entry cache; its idle group must
+        # not keep it resident
+        assert grp_u3.engine._released
+        # a late joiner to the idle group still gets a correct answer
+        # (history serves the first 4 samples; the engine re-materializes
+        # lazily for the 4 fresh iterations)
+        r3 = svc.submit(CountRequest("g", "u3", max_iters=8))
+        svc.run()
+        assert svc.result(r3).iterations == 8
+        assert svc.result(r1).estimate == pytest.approx(
+            np.mean(grp_u3.history[:4]))
 
 
 class TestEstimateCache:
