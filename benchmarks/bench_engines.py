@@ -12,7 +12,6 @@ increasing batch sizes — the dispatch-overhead lever of the batch PR.
 
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit, timeit
 from repro.core import build_engine, get_template

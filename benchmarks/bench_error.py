@@ -6,7 +6,6 @@ reassociation); (b) the (eps, delta) estimator converges to the exact count.
 
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit
 from repro.core import build_engine, count_subgraphs_exact, get_template

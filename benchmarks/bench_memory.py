@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import sys
 
-import numpy as np
 
 from benchmarks.common import emit, timeit
 from repro.core import build_engine, get_template

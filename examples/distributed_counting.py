@@ -12,7 +12,6 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import argparse
 
-import jax
 
 from repro.core import count_subgraphs_exact, get_template
 from repro.core.distributed import DistributedPgbsc

@@ -12,8 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import motif_features
 from repro.configs import reduced_config
-from repro.core.motif_features import motif_features
 from repro.graph import Graph
 from repro.models.gnn import gnn_forward, gnn_loss, init_gnn
 from repro.optim.optimizer import AdamWConfig, adamw_update, init_adamw
@@ -53,6 +53,8 @@ train_mask[anchors[: n_roles]] = 1.0          # half the anchors train
 eval_nodes = anchors[n_roles:]
 
 # --- motif features from the paper's engine --------------------------------
+# (path4 and star4 share one fused-plan engine: their common rooted
+# sub-templates are computed once per coloring — see repro.api)
 feats_motif = motif_features(g, ["u3", "path4", "star4"], n_iters=8, seed=1)
 print("motif feature matrix:", feats_motif.shape,
       "\n  role0 (pendant-star) means:",

@@ -1,50 +1,69 @@
-"""Quickstart: count tree subgraphs in a graph with PGBSC.
+"""Quickstart: count tree subgraphs in a graph through the query API.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.core import (build_engine, count_subgraphs_exact, get_template)
+from repro.api import TemplateSpec, count
+from repro.core import count_subgraphs_exact, get_template
 from repro.graph import erdos_renyi
 
 g = erdos_renyi(500, 8.0, seed=0)
 print(f"graph: n={g.n} directed-edge-slots={g.m} avg_deg={g.avg_degree:.1f}")
 
+# --- one-call counting -----------------------------------------------------
+# count() accepts registry names (sugar), dynamic path{k}/star{k} names,
+# TemplateSpec objects, or raw edge lists; results carry the estimate, its
+# standard error, and a 95% confidence interval.
 for tname in ("u3", "u5", "u7"):
     t = get_template(tname)
-    # batch_size chunks the estimator's coloring batches: each device call
-    # runs 25 colorings through the plan at once (peak table memory per plan
-    # node ~ batch_size * C(k, t) * n floats).
-    engine = build_engine(g, t, engine="pgbsc", dedup=True, batch_size=25)
-    est = engine.estimate(n_iters=50, seed=42)
+    res = count(g, tname, max_iters=50, seed=42)
     line = (f"{tname} (k={t.k}, aut={t.automorphisms}): "
-            f"estimate={est['count']:.4g} +- {est['std']:.2g}")
+            f"estimate={res.estimate:.4g} +- {res.stderr:.2g}")
     if g.n <= 60:  # exact verification is exponential; small graphs only
         line += f"  exact={count_subgraphs_exact(g, t)}"
     print(line)
 
-# compare the three engines of the paper on a batch of colorings: one
-# batched device call per engine instead of a Python loop
-from repro.graph.coloring import batch_colorings
-t = get_template("u5")
-colorings = batch_colorings(7, range(8), g.n, t.k)   # (8, n) device-side
-for eng in ("fascia", "pfascia", "pgbsc"):
-    e = build_engine(g, t, eng)
-    totals, _ = e.count_colorful_batch(colorings)
-    print(f"{eng:8s} colorful-counts[0:3] = "
-          f"{[round(float(v), 1) for v in totals[:3]]} "
-          f"(work: {e.work.total_flops / 1e6:.1f} Mflop/coloring)")
+# an arbitrary user tree — no registry entry needed
+chair = TemplateSpec(edges=((0, 1), (1, 2), (1, 3)), name="chair")
+res = count(g, chair, max_iters=32, seed=7)
+print(f"{chair.display_name} (hash {chair.canonical_hash[:8]}): "
+      f"estimate={res.estimate:.4g} +- {res.stderr:.2g}")
 
-# --- multi-request counting service ---------------------------------------
+# --- multi-template queries: cross-template subplan sharing ----------------
+# count_many fuses same-k templates into ONE execution plan: canonical
+# rooted sub-templates they share (paths, star arms) are computed once per
+# coloring for the whole bundle. The SpMM column-op counters prove it.
+from repro.api import CountQuery, compile_query
+
+bundle = ["u5", "path5", "star5", "u7"]
+cq = compile_query(g, CountQuery(templates=bundle, max_iters=16, seed=1))
+results = cq.run()
+for name, r in zip(bundle, results):
+    print(f"count_many {name}: estimate={r.estimate:.4g} +- {r.stderr:.2g} "
+          f"({r.iterations} iters{', fused' if r.shared_group else ''})")
+fused_cols = sum(e.n_spmm_cols_dispatched for e in cq.engines)
+solo_cols = 0
+for name in bundle:
+    solo = compile_query(g, CountQuery(templates=[name], max_iters=16, seed=1))
+    solo.run()
+    solo_cols += sum(e.n_spmm_cols_dispatched for e in solo.engines)
+print(f"SpMM column-ops: fused={fused_cols} vs per-template={solo_cols} "
+      f"({100 * (1 - fused_cols / solo_cols):.0f}% saved by subplan sharing)")
+
+# --- multi-request counting service ----------------------------------------
 # Many tenants, one scheduler: requests carry a precision target
 # (rel_stderr) instead of a fixed iteration budget, engines are cached by
-# graph-content fingerprint, and requests sharing (graph, template, seed)
-# consume one sample stream — the repeated u3 below adds no device work.
+# graph-content fingerprint x template canonical hash, and requests whose
+# templates are the SAME tree — by any spelling — consume one sample
+# stream: the relabeled path4 edge list below adds no device work over the
+# "path4" registry name.
 from repro.service import CountingService, CountRequest
 
+relabeled_path4 = TemplateSpec(edges=((3, 2), (2, 1), (1, 0)), root=3)
 svc = CountingService(round_size=16, default_max_iters=64)
 svc.add_graph("demo", g)
-rids = [svc.submit(CountRequest("demo", tname, rel_stderr=0.15))
-        for tname in ("u3", "u5", "u3")]
+rids = [svc.submit(CountRequest("demo", tpl, rel_stderr=0.15))
+        for tpl in ("u3", "path4", relabeled_path4)]
 svc.run()
 for rid in rids:
     r = svc.result(rid)
@@ -54,5 +73,5 @@ for rid in rids:
           f"{', shared' if r.shared_group else ''})")
 stats = svc.stats()
 print(f"service: {stats['engine_cache']['builds']} engine builds for "
-      f"{stats['requests']} requests, "
+      f"{stats['requests']} requests, {stats['groups']} dispatch groups, "
       f"{stats['unique_iterations']} device iterations")

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.data.synthetic import lm_token_stream
 from repro.models.transformer import (init_decode_cache, init_lm,
-                                      lm_decode_step, lm_forward)
+                                      lm_decode_step)
 
 base = get_config("gemma3-1b")   # exercises local/global attention serving
 model = dataclasses.replace(

@@ -200,7 +200,6 @@ def input_specs(arch: ArchConfig, cell_name: str):
 def decode_hint_specs(arch: ArchConfig, cell: ShapeCell):
     """Per-layer cache + logits PartitionSpecs for decode shard hints."""
     b = cell.dims["batch"]
-    m = arch.model
     if b == 1:
         cache = P(None, "model", None, "data")    # (B, S, Hkv, Dh)
         logits = P(None, None, None, None, "model")   # (B, Hkv, G, 1, S)

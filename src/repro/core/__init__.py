@@ -10,8 +10,10 @@ from repro.core.executor import (PlanExecutor, Schedule, compute_schedule,
                                  pick_execution)
 from repro.core.oracle import (count_colorful_embeddings, count_embeddings,
                                count_subgraphs_exact)
-from repro.core.templates import (STANDARD_TEMPLATES, ExecutionPlan, PlanNode,
-                                  TreeTemplate, get_template)
+from repro.core.templates import (STANDARD_TEMPLATES, ExecutionPlan,
+                                  FusedPlan, PlanNode, TemplateSpec,
+                                  TreeTemplate, as_template,
+                                  compile_fused_plan, get_template)
 
 __all__ = [
     "tree_automorphisms",
@@ -22,5 +24,6 @@ __all__ = [
     "keep_everything_bytes", "peak_table_bytes", "pick_execution",
     "count_colorful_embeddings", "count_embeddings", "count_subgraphs_exact",
     "STANDARD_TEMPLATES", "ExecutionPlan", "PlanNode", "TreeTemplate",
+    "TemplateSpec", "FusedPlan", "as_template", "compile_fused_plan",
     "get_template",
 ]

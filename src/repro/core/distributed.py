@@ -25,7 +25,6 @@ mesh multiples; padded combo rows are masked out of the final reduction.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from math import comb
 
 import jax
@@ -35,7 +34,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import colorsets as cs
 from repro.core import executor as pexec
-from repro.core.templates import TreeTemplate
+from repro.core.templates import TreeTemplate, as_template
 from repro.graph.structure import Graph
 
 __all__ = ["DistributedPgbsc", "build_ring_edges", "coloring_for_seed"]
@@ -109,9 +108,12 @@ class DistributedPgbsc:
     the per-pod colorful sums.
     """
 
-    def __init__(self, g: Graph | None, template: TreeTemplate, mesh: Mesh,
+    def __init__(self, g: Graph | None, template, mesh: Mesh,
                  *, plan: str = "dedup", abstract_dims: dict | None = None,
                  memory_budget_bytes: int | None = None):
+        # registry names / TemplateSpec / edge lists coerce like everywhere
+        # else in the query API; TreeTemplate passes through untouched
+        template: TreeTemplate = as_template(template)
         self.template = template
         self.k = template.k
         self.mesh = mesh

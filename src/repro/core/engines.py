@@ -37,7 +37,8 @@ import numpy as np
 
 from repro.core import colorsets as cs
 from repro.core import executor as pexec
-from repro.core.templates import ExecutionPlan, TreeTemplate
+from repro.core.templates import (ExecutionPlan, as_template,
+                                  compile_fused_plan)
 from repro.graph.structure import Graph
 from repro.kernels.ema import ops as ema_ops
 from repro.kernels.spmm import ops as spmm_ops
@@ -77,11 +78,23 @@ class WorkEstimate:
 
 
 class CountingEngine:
-    """Counts colorful embeddings of a template for a given coloring.
+    """Counts colorful embeddings of one template — or a fused bundle of
+    same-k templates — for a given coloring.
 
     Call :meth:`count_colorful` with an (n,) int32 coloring; returns the
     scalar sum over the root table (= alpha x #colorful copies) and the root
     table itself. :meth:`estimate` runs the full color-coding estimator.
+
+    Multi-template fusion
+    ---------------------
+    Passing a list/tuple of equal-k templates builds ONE fused
+    :class:`~repro.core.templates.FusedPlan`: canonical rooted sub-templates
+    shared across the bundle are computed once per coloring (tables and
+    their passive SpMMs alike), every template's root table is a kept output
+    of the same walk, and the totals come back as a ``(T,)`` vector (or
+    ``(B, T)`` batched). ``n_spmm_cols_dispatched`` counts the SpMM
+    column-ops actually dispatched, so the cross-template savings are
+    directly observable against a per-template engine sum.
 
     Memory management
     -----------------
@@ -117,7 +130,7 @@ class CountingEngine:
     relative error (floating-point reassociation only).
     """
 
-    def __init__(self, g: Graph, template: TreeTemplate, engine: str = "pgbsc",
+    def __init__(self, g: Graph, template, engine: str = "pgbsc",
                  spmm_method: str = "segment", use_pallas_ema: bool = False,
                  interpret: bool = True, dedup: bool = False,
                  plan: str | None = None, dtype=jnp.float32,
@@ -125,38 +138,69 @@ class CountingEngine:
                  memory_budget_bytes: int | None = None):
         if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine!r}")
+        if isinstance(template, (list, tuple)):
+            if not template:
+                raise ValueError("engine needs at least one template")
+            templates = tuple(as_template(t) for t in template)
+        else:
+            templates = (as_template(template),)
+        ks = sorted({t.k for t in templates})
+        if len(ks) != 1:
+            raise ValueError(
+                f"one engine fuses equal-k templates only, got k={ks}; "
+                "group by k first (repro.api.count_many does)")
         self.g = g
-        self.template = template
+        self.templates = templates
+        self.template = templates[0]
+        self.fused = len(templates) > 1
         self.engine = engine
-        self.k = template.k
+        self.k = ks[0]
         self.dtype = dtype
         self.spmm_method = spmm_method
         self.memory_budget_bytes = memory_budget_bytes
         plan_name = plan or ("dedup" if dedup else "plain")
-        self.plan: ExecutionPlan = {
-            "plain": template.plan, "dedup": template.plan_dedup,
-            "optimized": template.plan_optimized}[plan_name]
+        if self.fused:
+            if plan_name == "plain":
+                raise ValueError(
+                    "plan='plain' is meaningless for a fused multi-template "
+                    "engine: cross-template fusion IS canonical dedup; use "
+                    "plan='dedup' or plan='optimized'")
+            # cross-template canonical dedup: one plan, one root per template
+            fp = compile_fused_plan(templates,
+                                    optimize=(plan_name == "optimized"))
+            self.plan: ExecutionPlan = fp.plan
+            self.roots: tuple[int, ...] = fp.roots
+        else:
+            self.plan = {
+                "plain": self.template.plan, "dedup": self.template.plan_dedup,
+                "optimized": self.template.plan_optimized}[plan_name]
+            self.roots = (self.plan.n_nodes - 1,)
         self.use_pallas_ema = use_pallas_ema
         self.interpret = interpret
 
         # budget -> (derived batch size, liveness schedule, chunking); an
-        # explicit batch_size only overrides the batch, not the schedule
+        # explicit batch_size only overrides the batch, not the schedule.
+        # Every fused root is a kept output (never freed by the walk).
+        keep = tuple(i for i in self.roots if i != self.plan.n_nodes - 1)
         self.exec_choice = pexec.pick_execution(
             self.plan, self.k, g.n,
             memory_budget_bytes=memory_budget_bytes, dtype=dtype,
             passive_cache=(engine != "fascia"),
-            allow_chunking=(engine == "pgbsc"))
+            allow_chunking=(engine == "pgbsc"), keep=keep)
         self.schedule = self.exec_choice.schedule
         self.batch_size = int(batch_size if batch_size is not None
                               else self.exec_choice.batch_size)
 
         self._materialize()
         self.work = self._estimate_work()
+        self.spmm_cols_per_coloring = self._spmm_cols_per_coloring()
         # dispatch accounting (service/benchmark introspection): device calls
-        # through the batched pipeline and coloring rows computed by them
-        # (padding rows included — they are real device work)
+        # through the batched pipeline, coloring rows computed by them
+        # (padding rows included — they are real device work), and SpMM
+        # column-ops those colorings cost (the fused-plan savings metric)
         self.n_batch_dispatches = 0
         self.n_colorings_dispatched = 0
+        self.n_spmm_cols_dispatched = 0
 
     # -------------------------------------------------------- device state
     def _materialize(self) -> None:
@@ -223,8 +267,13 @@ class CountingEngine:
 
     # ------------------------------------------------------------------ api
     def count_colorful(self, colors: jax.Array) -> tuple[jax.Array, jax.Array]:
-        """-> (sum over root table, root table)."""
+        """-> (sum over root table, root table).
+
+        For a fused engine the sum is a ``(T,)`` vector (one entry per
+        template) and the second element is the tuple of root tables.
+        """
         self._ensure()
+        self.n_spmm_cols_dispatched += self.spmm_cols_per_coloring
         return self._count_fn(jnp.asarray(colors))
 
     def count_colorful_batch(self, colorings: jax.Array,
@@ -232,7 +281,9 @@ class CountingEngine:
                              ) -> tuple[jax.Array, jax.Array]:
         """Batched :meth:`count_colorful` over a (B, n) coloring batch.
 
-        -> (totals (B,), root tables (B, ...)). The batch is chunked to
+        -> (totals (B,), root tables (B, ...)); a fused engine returns
+        totals (B, T) and a T-tuple of root-table batches. The batch is
+        chunked to
         ``batch_size`` (default: the budget-derived knob) colorings per
         device call; ragged tails are padded with the last coloring (and
         sliced off) so every chunk reuses one compiled program shape.
@@ -244,8 +295,9 @@ class CountingEngine:
                              f"{colorings.shape}")
         b = colorings.shape[0]
         if b == 0:
-            empty = jnp.zeros((0,), self.dtype)
-            return empty, empty
+            empty = jnp.zeros((0, len(self.templates)) if self.fused
+                              else (0,), self.dtype)
+            return empty, (() if self.fused else empty)
         # clamped to b: steady-state short calls (e.g. a runner checkpointing
         # every 4 with knob 16) must not pay 4x padded compute; the cost is
         # at most one extra compiled shape per distinct call length, and
@@ -263,20 +315,30 @@ class CountingEngine:
             tot, root = self._batch_fn(chunk)
             self.n_batch_dispatches += 1
             self.n_colorings_dispatched += bs
+            self.n_spmm_cols_dispatched += self.spmm_cols_per_coloring * bs
             totals.append(tot[: bs - pad])
-            roots.append(root[: bs - pad])
-        return jnp.concatenate(totals), jnp.concatenate(roots)
+            roots.append(tuple(r[: bs - pad] for r in root) if self.fused
+                         else root[: bs - pad])
+        if self.fused:
+            root_out = tuple(jnp.concatenate([r[j] for r in roots])
+                             for j in range(len(self.roots)))
+        else:
+            root_out = jnp.concatenate(roots)
+        return jnp.concatenate(totals), root_out
 
     def count_iterations_batch(self, iterations, seed: int = 0,
                                batch_size: int | None = None
-                               ) -> dict[int, float]:
+                               ) -> dict:
         """Colorful sums for explicit iteration ids, batched device-side.
 
-        The colorings are derived from ``fold_in(seed, iteration)`` *inside*
-        the jit (no host-side generation or transfer) and the full execution
-        plan runs once per ``batch_size`` chunk. Per-iteration values are
-        bitwise independent of the batch composition, which keeps the
-        fault-tolerant runner's resume-equals-straight invariant intact.
+        -> ``{iteration id: colorful sum}`` — a float per id, or a ``(T,)``
+        float array per id for a fused engine (template order =
+        ``self.templates``). The colorings are derived from
+        ``fold_in(seed, iteration)`` *inside* the jit (no host-side
+        generation or transfer) and the full execution plan runs once per
+        ``batch_size`` chunk. Per-iteration values are bitwise independent
+        of the batch composition, which keeps the fault-tolerant runner's
+        resume-equals-straight invariant intact.
         """
         self._ensure()
         its = [int(i) for i in iterations]
@@ -294,7 +356,7 @@ class CountingEngine:
                 return totals
 
             self._seeded_fn = jax.jit(seeded)
-        out: dict[int, float] = {}
+        out: dict = {}
         for base in range(0, len(its), bs):
             chunk = its[base: base + bs]
             padded = chunk + [chunk[-1]] * (bs - len(chunk))
@@ -302,8 +364,9 @@ class CountingEngine:
                 jnp.int32(seed), jnp.asarray(padded, jnp.int32)))
             self.n_batch_dispatches += 1
             self.n_colorings_dispatched += bs
+            self.n_spmm_cols_dispatched += self.spmm_cols_per_coloring * bs
             for i, it in enumerate(chunk):
-                out[it] = float(totals[i])
+                out[it] = totals[i].copy() if self.fused else float(totals[i])
         return out
 
     def estimate(self, n_iters: int, seed: int = 0,
@@ -315,21 +378,42 @@ class CountingEngine:
         device call); samples are identical to the sequential per-coloring
         loop because the colorings derive from the same fold_in keys.
         """
-        alpha = self.template.automorphisms
+        if self.fused:
+            raise ValueError("estimate() is single-template; fused engines "
+                             "use estimate_many()")
+        return self.estimate_many(n_iters, seed=seed,
+                                  start_iteration=start_iteration,
+                                  batch_size=batch_size)[0]
+
+    def estimate_many(self, n_iters: int, seed: int = 0,
+                      start_iteration: int = 0,
+                      batch_size: int | None = None) -> list[dict]:
+        """Per-template color-coding estimates from ONE fused plan run.
+
+        Returns one :meth:`estimate`-shaped dict per template (in
+        ``self.templates`` order); every template's samples come from the
+        same colorings, so a template also counted solo with the same seed
+        reproduces its samples to floating-point reassociation.
+        """
         p = cs.colorful_probability(self.k)
         ids = range(start_iteration, start_iteration + n_iters)
         per = self.count_iterations_batch(ids, seed=seed,
                                           batch_size=batch_size)
-        samples = [per[it] / (alpha * p) for it in ids]
-        arr = np.asarray(samples)
-        return {
-            "count": float(arr.mean()),
-            "std": float(arr.std(ddof=1)) if len(arr) > 1 else 0.0,
-            "samples": samples,
-            "n_iters": n_iters,
-            "alpha": alpha,
-            "colorful_probability": p,
-        }
+        vals = np.stack([np.atleast_1d(np.asarray(per[it])) for it in ids])
+        results = []
+        for j, t in enumerate(self.templates):
+            alpha = t.automorphisms
+            samples = [float(v) / (alpha * p) for v in vals[:, j]]
+            arr = np.asarray(samples)
+            results.append({
+                "count": float(arr.mean()),
+                "std": float(arr.std(ddof=1)) if len(arr) > 1 else 0.0,
+                "samples": samples,
+                "n_iters": n_iters,
+                "alpha": alpha,
+                "colorful_probability": p,
+            })
+        return results
 
     # ------------------------------------------------------------- builders
     def _build(self) -> Callable:
@@ -381,9 +465,16 @@ class CountingEngine:
             # colors: (N,) or batched (B, N) — every step below is
             # polymorphic over the leading batch dimension.
             leaf = self._leaf_table_cn(colors)
-            root = runner.run(leaf, passive_op=passive_op, combine=combine,
-                              combine_direct=combine_direct)
-            return root.sum(axis=(-2, -1)), root
+            outs = runner.run(leaf, passive_op=passive_op, combine=combine,
+                              combine_direct=combine_direct,
+                              outputs=self.roots)
+            if not self.fused:
+                root = outs[0]
+                return root.sum(axis=(-2, -1)), root
+            # one fused walk, one (..., T) totals vector — template j's
+            # entry comes from its own root table
+            totals = jnp.stack([r.sum(axis=(-2, -1)) for r in outs], axis=-1)
+            return totals, outs
 
         return run
 
@@ -434,11 +525,16 @@ class CountingEngine:
 
         def run(colors: jax.Array):
             leaf = self._leaf_table_cn(colors).T  # (N, k)
-            root = runner.run(
+            outs = runner.run(
                 leaf,
                 passive_op=None if not pruned else passive_op,
-                combine=combine, combine_direct=combine_direct)
-            return root.sum(), root
+                combine=combine, combine_direct=combine_direct,
+                outputs=self.roots)
+            if not self.fused:
+                root = outs[0]
+                return root.sum(), root
+            totals = jnp.stack([r.sum() for r in outs])
+            return totals, outs
 
         return run
 
@@ -451,6 +547,33 @@ class CountingEngine:
     def peak_table_bytes(self) -> int:
         """Modeled peak live table bytes of one batched dispatch."""
         return self.exec_choice.peak_bytes_per_coloring * self.batch_size
+
+    def _spmm_cols_per_coloring(self) -> int:
+        """Static SpMM (passive-transform) column count of one coloring.
+
+        ``pgbsc``/``pfascia`` pay ``C(k, t_p)`` columns once per *distinct*
+        passive child (the executor's y-cache), which is where fused plans
+        win: a passive sub-template shared across templates is one SpMM for
+        the whole bundle. Colorset-chunked nodes bypass the cache and pay
+        per consumer; ``fascia`` recomputes the sweep inside the split loop
+        (``C(k, t)`` columns per split, paper §3.1).
+        """
+        cols = 0
+        seen: set[int] = set()
+        chunk_map = self.schedule.chunk_map
+        for idx, node in enumerate(self.plan.nodes):
+            if node.is_leaf:
+                continue
+            t = node.size
+            t_a = self.plan.nodes[node.active].size
+            if self.engine == "fascia":
+                cols += comb(self.k, t) * comb(t, t_a)
+            elif chunk_map.get(idx, 1) > 1:
+                cols += comb(self.k, t - t_a)
+            elif node.passive not in seen:
+                seen.add(node.passive)
+                cols += comb(self.k, t - t_a)
+        return cols
 
     def _estimate_work(self) -> WorkEstimate:
         w = WorkEstimate(batch=max(1, self.batch_size))
@@ -472,7 +595,9 @@ class CountingEngine:
         return w
 
 
-def build_engine(g: Graph, template: TreeTemplate, engine: str = "pgbsc",
+def build_engine(g: Graph, template, engine: str = "pgbsc",
                  **kw) -> CountingEngine:
-    """Convenience constructor (see CountingEngine)."""
+    """Convenience constructor (see CountingEngine). ``template`` accepts a
+    TreeTemplate / TemplateSpec / registry name, or a list of them (equal k)
+    for a fused multi-template engine."""
     return CountingEngine(g, template, engine=engine, **kw)

@@ -73,6 +73,10 @@ class Schedule:
         Whether the walk materializes/caches the passive transform
         (SpMM / hoisted neighbor sum). False for FASCIA, whose neighbor
         sweep lives inside the split loop (paper §3.1).
+    ``keep``
+        Extra output nodes (beyond the implicit last node) that are never
+        freed — fused multi-template plans keep every template's root table
+        so :meth:`PlanExecutor.run` can return all of them.
     """
 
     order: tuple[int, ...]
@@ -80,6 +84,7 @@ class Schedule:
     free_y: tuple[tuple[int, ...], ...]
     chunks: tuple[tuple[int, int], ...] = ()
     passive_cache: bool = True
+    keep: tuple[int, ...] = ()
 
     @property
     def chunk_map(self) -> dict[int, int]:
@@ -117,6 +122,7 @@ def _validate_order(plan, order) -> dict[int, int]:
 
 def liveness(plan, order, *, passive_cache: bool = True,
              chunks: dict[int, int] | None = None,
+             keep: tuple[int, ...] = (),
              ) -> tuple[tuple[tuple[int, ...], ...],
                         tuple[tuple[int, ...], ...]]:
     """Last-use analysis -> (free_tables, free_y), parallel to ``order``.
@@ -126,7 +132,8 @@ def liveness(plan, order, *, passive_cache: bool = True,
     *passive* child directly; the step that converts it into its cached
     y-entry (the first unchunked passive consumer in ``order``). A y-cache
     entry dies at its last unchunked passive consumer. The root table is
-    never freed (it is the result).
+    never freed (it is the result); neither is any node in ``keep`` —
+    the extra output roots of a fused multi-template plan.
     """
     pos = _validate_order(plan, order)
     cmap = dict(chunks or {})
@@ -149,11 +156,11 @@ def liveness(plan, order, *, passive_cache: bool = True,
         # the y entry itself lives until its last consumer (max step)
         table_last[p] = max(table_last[p], min(steps))
         y_last[p] = max(steps)
-    root = n - 1
+    keepset = {n - 1} | set(keep)
     free_tables: list[tuple[int, ...]] = [() for _ in order]
     free_y: list[tuple[int, ...]] = [() for _ in order]
     for i, last in table_last.items():
-        if i != root:
+        if i not in keepset:
             free_tables[last] = free_tables[last] + (i,)
     for p, last in y_last.items():
         free_y[last] = free_y[last] + (p,)
@@ -277,7 +284,8 @@ def keep_everything_bytes(plan, k: int, n: int, batch: int = 1,
 # scheduling
 # --------------------------------------------------------------------------
 def _greedy_order(plan, k: int, *, passive_cache: bool,
-                  chunks: dict[int, int]) -> list[int]:
+                  chunks: dict[int, int],
+                  keep: tuple[int, ...] = ()) -> list[int]:
     """Greedy list scheduling: repeatedly evaluate the ready internal node
     whose modeled step peak (then post-step live size) is smallest.
 
@@ -306,6 +314,9 @@ def _greedy_order(plan, k: int, *, passive_cache: bool,
             if node.passive not in y_refs:
                 refs[buf(node.passive)] = refs.get(buf(node.passive), 0) + 1
             y_refs[node.passive] = y_refs.get(node.passive, 0) + 1
+    # kept outputs (fused-plan roots) are never droppable: pin their buffers
+    for i in keep:
+        refs[buf(i)] = refs.get(buf(i), 0) + plan.n_nodes + 1
 
     live_t: dict[object, int] = {}
     if leaf_idxs:
@@ -377,31 +388,34 @@ def _greedy_order(plan, k: int, *, passive_cache: bool,
 def compute_schedule(plan, k: int | None = None, *,
                      passive_cache: bool = True,
                      chunks: dict[int, int] | None = None,
-                     order_mode: str = "auto") -> Schedule:
+                     order_mode: str = "auto",
+                     keep: tuple[int, ...] = ()) -> Schedule:
     """Build a :class:`Schedule` for ``plan``.
 
     ``order_mode``: ``"program"`` keeps the plan's own post-order;
     ``"greedy"`` uses the min-peak list scheduler; ``"auto"`` (default)
     simulates both and keeps the one with the smaller modeled peak.
+    ``keep`` lists extra output nodes never to free (fused-plan roots).
     """
     k = k or plan.k
     cmap = dict(chunks or {})
+    keep = tuple(sorted(set(keep)))
     candidates: list[tuple[int, ...]] = []
     if order_mode in ("program", "auto"):
         candidates.append(tuple(range(plan.n_nodes)))
     if order_mode in ("greedy", "auto"):
         candidates.append(tuple(_greedy_order(
-            plan, k, passive_cache=passive_cache, chunks=cmap)))
+            plan, k, passive_cache=passive_cache, chunks=cmap, keep=keep)))
     if not candidates:
         raise ValueError(f"unknown order_mode {order_mode!r}")
     best: Schedule | None = None
     best_peak: int | None = None
     for order in candidates:
         ft, fy = liveness(plan, order, passive_cache=passive_cache,
-                          chunks=cmap)
+                          chunks=cmap, keep=keep)
         sched = Schedule(order=order, free_tables=ft, free_y=fy,
                          chunks=tuple(sorted(cmap.items())),
-                         passive_cache=passive_cache)
+                         passive_cache=passive_cache, keep=keep)
         peak = simulate_peak_rows(plan, k, sched)
         if best_peak is None or peak < best_peak:
             best, best_peak = sched, peak
@@ -415,7 +429,8 @@ def pick_execution(plan, k: int, n: int, *,
                    memory_budget_bytes: int | None = None,
                    dtype=np.float32, max_batch: int = MAX_AUTO_BATCH,
                    passive_cache: bool = True,
-                   allow_chunking: bool = True) -> ExecutionChoice:
+                   allow_chunking: bool = True,
+                   keep: tuple[int, ...] = ()) -> ExecutionChoice:
     """Turn one ``memory_budget_bytes`` knob into (batch size, schedule).
 
     The batch is the largest B with ``B * peak(batch=1) <= budget`` (capped
@@ -429,7 +444,7 @@ def pick_execution(plan, k: int, n: int, *,
     budget = memory_budget_bytes if memory_budget_bytes is not None \
         else DEFAULT_MEMORY_BUDGET_BYTES
     itemsize = np.dtype(dtype).itemsize
-    sched = compute_schedule(plan, k, passive_cache=passive_cache)
+    sched = compute_schedule(plan, k, passive_cache=passive_cache, keep=keep)
     per1 = simulate_peak_rows(plan, k, sched) * n * itemsize
     if per1 <= budget:
         batch = max(1, min(max_batch, budget // max(per1, 1)))
@@ -442,7 +457,7 @@ def pick_execution(plan, k: int, n: int, *,
 
     def evaluate(chunk_map):
         s = compute_schedule(plan, k, passive_cache=passive_cache,
-                             chunks=chunk_map)
+                             chunks=chunk_map, keep=keep)
         p = _step_peaks(plan, k, s.order, s.free_tables, s.free_y,
                         passive_cache=passive_cache, chunks=s.chunk_map)
         return s, p, max(p)
@@ -522,7 +537,11 @@ class PlanExecutor:
         return total
 
     def run(self, leaf, *, passive_op=None, combine=None,
-            combine_direct=None, on_step=None):
+            combine_direct=None, on_step=None, outputs=None):
+        """Walk the schedule; returns the root table, or — when ``outputs``
+        (a tuple of node indices) is given — one table per output index.
+        Every non-root output must be in the schedule's ``keep`` set, i.e.
+        the schedule must have been built with ``keep=`` covering it."""
         plan, sched = self.plan, self.schedule
         chunks = sched.chunk_map
         if sched.passive_cache and passive_op is None:
@@ -533,6 +552,13 @@ class PlanExecutor:
         tables: dict[int, object] = {}
         y: dict[int, object] = {}
         root_idx = plan.n_nodes - 1
+        keepset = {root_idx} | set(sched.keep)
+        if outputs is not None:
+            missing = [i for i in outputs if i not in keepset]
+            if missing:
+                raise ValueError(
+                    f"outputs {missing} are not kept by this schedule; "
+                    "build it with compute_schedule(..., keep=...)")
         for step, idx in enumerate(sched.order):
             node = plan.nodes[idx]
             if node.is_leaf:
@@ -557,10 +583,12 @@ class PlanExecutor:
             if on_step is not None:
                 on_step(step, self._live_bytes(tables, y))
             for i in sched.free_tables[step]:
-                if i != root_idx:
+                if i not in keepset:
                     tables.pop(i, None)
             for p in sched.free_y[step]:
                 y.pop(p, None)
             if on_step is not None:
                 on_step(step, self._live_bytes(tables, y))
+        if outputs is not None:
+            return tuple(tables[i] for i in outputs)
         return tables[root_idx]

@@ -6,6 +6,14 @@ this estimates the number of template copies touching v at the root — a
 structural feature vector usable by downstream GNNs (Graph Substructure
 Networks; Bouritsas et al.). This is the integration point between the
 paper's engine and the assigned GNN architectures.
+
+Since the query-API redesign the template list runs as ONE fused-plan
+engine per template size k (not a per-template engine loop): same-k
+templates share a coloring stream, and canonical rooted sub-templates they
+have in common — every star/path arm of a motif dictionary overlaps — are
+computed once per coloring for the whole group, with every template's root
+table a kept output of the same plan walk. Feature values are unchanged
+(same colorings, same DP) up to floating-point reassociation.
 """
 
 from __future__ import annotations
@@ -14,29 +22,40 @@ import numpy as np
 
 from repro.core.colorsets import colorful_probability
 from repro.core.engines import CountingEngine
-from repro.core.templates import TreeTemplate, get_template
+from repro.core.templates import TemplateSpec
 from repro.graph.coloring import iteration_key, random_coloring
 from repro.graph.structure import Graph
 
 __all__ = ["motif_features"]
 
 
-def motif_features(g: Graph, templates: list[str | TreeTemplate],
-                   n_iters: int = 8, seed: int = 0,
+def motif_features(g: Graph, templates: list, n_iters: int = 8, seed: int = 0,
                    engine: str = "pgbsc", log1p: bool = True) -> np.ndarray:
-    """(n, len(templates)) float32 matrix of per-vertex motif count estimates."""
-    feats = []
-    for tpl in templates:
-        t = get_template(tpl) if isinstance(tpl, str) else tpl
-        eng = CountingEngine(g, t, engine=engine, dedup=True)
-        p = colorful_probability(t.k)
-        acc = np.zeros(g.n, np.float64)
+    """(n, len(templates)) float32 matrix of per-vertex motif count estimates.
+
+    ``templates`` accepts registry names, :class:`TemplateSpec`,
+    TreeTemplate objects, or raw edge lists, in any mix.
+    """
+    specs = [TemplateSpec.of(t) for t in templates]
+    by_k: dict[int, list[int]] = {}
+    for i, s in enumerate(specs):
+        by_k.setdefault(s.k, []).append(i)
+
+    feats: list[np.ndarray | None] = [None] * len(specs)
+    for k, idxs in sorted(by_k.items()):
+        trees = [specs[i].tree for i in idxs]
+        eng = CountingEngine(g, trees if len(trees) > 1 else trees[0],
+                             engine=engine, dedup=True)
+        p = colorful_probability(k)
+        acc = np.zeros((len(idxs), g.n), np.float64)
         for it in range(n_iters):
-            key = iteration_key(seed, it)
-            colors = random_coloring(key, g.n, t.k)
-            _, root = eng.count_colorful(colors)
-            acc += np.asarray(root).sum(axis=0)
-        est = acc / n_iters / (p * t.automorphisms)
-        feats.append(est)
+            colors = random_coloring(iteration_key(seed, it), g.n, k)
+            _, roots = eng.count_colorful(colors)
+            if not eng.fused:
+                roots = (roots,)
+            for j, root in enumerate(roots):
+                acc[j] += np.asarray(root).sum(axis=0)
+        for j, i in enumerate(idxs):
+            feats[i] = acc[j] / n_iters / (p * trees[j].automorphisms)
     out = np.stack(feats, axis=1).astype(np.float32)
     return np.log1p(out) if log1p else out

@@ -57,7 +57,6 @@ def erdos_renyi(n: int, avg_degree: float, seed: int = 0) -> Graph:
 def barabasi_albert(n: int, m_attach: int = 4, seed: int = 0) -> Graph:
     """Preferential attachment (vectorized approximation via repeated targets)."""
     rng = np.random.default_rng(seed)
-    targets = list(range(m_attach))
     repeated: list[int] = list(range(m_attach))
     edges = []
     for v in range(m_attach, n):

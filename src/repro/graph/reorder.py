@@ -30,7 +30,6 @@ def rcm_order(g: Graph) -> np.ndarray:
             break
         root = int(remaining[ptr])
         visited[root] = True
-        queue = [root]
         order.append(root)
         head = len(order) - 1
         while head < len(order):
@@ -42,7 +41,6 @@ def rcm_order(g: Graph) -> np.ndarray:
                 nbrs = nbrs[np.argsort(degrees[nbrs], kind="stable")]
                 visited[nbrs] = True
                 order.extend(int(u) for u in nbrs)
-        del queue
     return np.asarray(order[::-1], dtype=np.int64)
 
 

@@ -19,7 +19,6 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.graph.structure import Graph
 from repro.kernels.spmm.pallas_bsr import spmm_bsr_pallas

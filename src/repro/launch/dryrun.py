@@ -18,13 +18,11 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.analysis.hlo import collective_summary, count_ops
 from repro.analysis.roofline import model_flops, roofline_from_compiled
 from repro.configs import get_config, input_specs, resolve_for_mesh, ARCH_IDS
-from repro.configs.shapes import DATA
 from repro.launch.mesh import make_production_mesh
 from repro.train import sharding as shd
 from repro.train.step import (abstract_train_state, build_serve_step,

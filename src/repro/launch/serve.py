@@ -1,16 +1,22 @@
 """Counting service launcher: a thin CLI over ``repro.service``.
 
     PYTHONPATH=src python -m repro.launch.serve \\
-        --graph rmat:10 --templates u5,u7,u5 --rel-stderr 0.05
+        --graph rmat:10 --templates u5,u7,path9 --rel-stderr 0.05 \\
+        --template-edges "0-1,1-2,1-3@0"
 
 Each template in ``--templates`` becomes one service request (repeats are
 real repeated requests — they exercise the engine cache and dispatch-group
-sharing). With ``--rel-stderr`` the scheduler stops each request adaptively
-at the target precision, capped at ``--iters``; without it every request
-runs exactly ``--iters`` iterations. Results always report the estimate,
-its standard error, and the 95% confidence interval from the
-per-iteration color-coding samples. Use ``--edge-list`` to serve a real
-graph; ``--results-cache`` persists answers across invocations.
+sharing); names accept the registry plus dynamic ``path{k}`` / ``star{k}``
+forms. ``--template-edges`` (repeatable) submits an *arbitrary* tree as
+``"u-v,u-v,...[@root]"`` — the query API's TemplateSpec — and shares
+caches/groups with any name spelling the same tree, because identity is
+the canonical template hash. With ``--rel-stderr`` the scheduler stops
+each request adaptively at the target precision, capped at ``--iters``;
+without it every request runs exactly ``--iters`` iterations. Results
+always report the estimate, its standard error, and the 95% confidence
+interval from the per-iteration color-coding samples. Use ``--edge-list``
+to serve a real graph; ``--results-cache`` persists answers across
+invocations.
 """
 
 from __future__ import annotations
@@ -18,6 +24,7 @@ from __future__ import annotations
 import argparse
 import json
 
+from repro.core.templates import TemplateSpec
 from repro.graph import erdos_renyi, rmat
 from repro.service import CountingService, CountRequest
 from repro.service.cache import DEFAULT_MAX_ENTRIES, EngineCache
@@ -41,6 +48,11 @@ def main(argv=None):
     ap.add_argument("--graph", default="rmat:12")
     ap.add_argument("--edge-list", default=None)
     ap.add_argument("--templates", default="u5,u7")
+    ap.add_argument("--template-edges", action="append", default=[],
+                    metavar="EDGES",
+                    help="arbitrary tree template as 'u-v,u-v,...[@root]' "
+                         "(repeatable); shares caches with any registry "
+                         "name spelling the same tree")
     ap.add_argument("--iters", type=int, default=64,
                     help="iteration cap (exact budget when no --rel-stderr)")
     ap.add_argument("--rel-stderr", type=float, default=None,
@@ -79,13 +91,17 @@ def main(argv=None):
         engine_cache=EngineCache(max_entries=args.engine_cache_size),
         estimate_cache=args.results_cache)
     svc.add_graph("g", g)
+    templates: list = [t for t in args.templates.split(",") if t]
+    for i, es in enumerate(args.template_edges):
+        templates.append(TemplateSpec.from_edge_string(es, name=f"edges{i}"))
     rids = []
-    for tname in args.templates.split(","):
+    for tpl in templates:
         rid = svc.submit(CountRequest(
-            graph="g", template=tname, engine=args.engine, plan=args.plan,
+            graph="g", template=tpl, engine=args.engine, plan=args.plan,
             rel_stderr=args.rel_stderr, max_iters=args.iters,
             seed=args.seed))
-        rids.append((rid, tname))
+        label = tpl if isinstance(tpl, str) else tpl.display_name
+        rids.append((rid, label))
     svc.run()
 
     results = {}

@@ -8,7 +8,6 @@ regardless of param dtype.
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -78,7 +78,6 @@ def init_autoint(key, cfg) -> dict:
 def _field_embeddings(params, cfg, batch) -> jnp.ndarray:
     """-> (B, n_fields, embed_dim)."""
     sparse = batch["sparse_ids"]                  # (B, n_sparse) int32
-    b = sparse.shape[0]
     # single-valued fields: per-field lookup from the stacked table
     field_ids = jnp.arange(cfg.n_sparse)
     emb = jax.vmap(

@@ -13,7 +13,6 @@ x 2-mesh dry-run tractable.
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -55,7 +54,6 @@ def init_lm(key, cfg: LMConfig) -> dict:
             p["mlp"] = L.init_mlp(kf, cfg.d_model, d_ff, dt)
         return p
 
-    n_dense = cfg.first_dense_layers if cfg.moe else cfg.n_layers
     n_scan = cfg.n_layers - (cfg.first_dense_layers if cfg.moe else 0)
     moe_scan = cfg.moe is not None
 

@@ -7,7 +7,6 @@ No external deps: optimizer state is a pytree mirroring the params.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -3,16 +3,22 @@
 Engine builds are the expensive fixed cost of a request: SpMM preparation
 walks the whole edge set and the first dispatch pays jit compilation. The
 :class:`EngineCache` keys built engines by
-``(graph fingerprint, template, engine, plan, build options)`` so repeated
-and concurrent requests never rebuild or recompile — the graph's *content*
-hash (``Graph.fingerprint``) is the key component, so two differently-named
-registrations of the same graph still share one engine.
+``(graph fingerprint, template canonical hash, engine, plan, build
+options)`` so repeated and concurrent requests never rebuild or recompile —
+*content* hashes on both axes: the graph's ``Graph.fingerprint`` and the
+template's ``canonical_hash``, so two differently-named registrations of
+the same graph AND two spellings of the same tree (registry name vs. raw
+edge list, relabeled vertices) still share one engine. A list of same-k
+templates keys a fused multi-template engine the same way (joined hashes).
 
 The :class:`EstimateCache` persists *answers* (estimate, stderr, iteration
 count) keyed by the same identity plus the coloring seed, as a JSON file
 that is atomically replaced on update. A new service process can serve a
 repeat query straight from it — without even building an engine — whenever
-the cached precision already meets the request's target.
+the cached precision already meets the request's target. The file carries
+a ``schema`` version: entries written before the canonical-hash keying
+(version < 2 keyed by template *names*) are ignored on load — never
+crashed on — so a stale name key can't alias a canonical-hash key.
 """
 
 from __future__ import annotations
@@ -21,14 +27,33 @@ import json
 import os
 from collections import OrderedDict
 
-from repro.core import build_engine, get_template
+from repro.core import build_engine
 from repro.core.engines import CountingEngine
+from repro.core.templates import TemplateSpec, as_template
 from repro.graph.structure import Graph
 
-__all__ = ["EngineCache", "EstimateCache"]
+__all__ = ["EngineCache", "EstimateCache", "SCHEMA_VERSION"]
 
 
 DEFAULT_MAX_ENTRIES = 8
+
+# estimate-cache file schema; bumped when key semantics change (v2: keys
+# carry template canonical hashes instead of registry names)
+SCHEMA_VERSION = 2
+
+
+def _template_key(template) -> str:
+    """Canonical-hash key component for one template or a fused bundle."""
+    if isinstance(template, (list, tuple)):
+        return "+".join(TemplateSpec.of(t).canonical_hash for t in template)
+    return TemplateSpec.of(template).canonical_hash
+
+
+def _template_build_arg(template):
+    """What build_engine receives: TreeTemplate(s), warm caches preserved."""
+    if isinstance(template, (list, tuple)):
+        return [as_template(t) for t in template]
+    return as_template(template)
 
 
 class EngineCache:
@@ -55,21 +80,23 @@ class EngineCache:
         self.evictions = 0
 
     @staticmethod
-    def key(g: Graph, template: str, engine: str, plan: str,
+    def key(g: Graph, template, engine: str, plan: str,
             **build_kw) -> tuple:
-        return (g.fingerprint, template, engine, plan,
+        return (g.fingerprint, _template_key(template), engine, plan,
                 tuple(sorted(build_kw.items())))
 
-    def get(self, g: Graph, template: str, engine: str = "pgbsc",
+    def get(self, g: Graph, template, engine: str = "pgbsc",
             plan: str = "optimized", **build_kw) -> CountingEngine:
+        """``template``: name / TemplateSpec / TreeTemplate / edge list, or
+        a list of them (equal k) for a fused multi-template engine."""
         k = self.key(g, template, engine, plan, **build_kw)
         if k in self._engines:
             self.hits += 1
             self._engines.move_to_end(k)
             return self._engines[k]
         self.misses += 1
-        eng = build_engine(g, get_template(template), engine, plan=plan,
-                           **build_kw)
+        eng = build_engine(g, _template_build_arg(template), engine,
+                           plan=plan, **build_kw)
         self.builds += 1
         self._engines[k] = eng
         if self.max_entries is not None:
@@ -101,6 +128,10 @@ class EstimateCache:
     Entries: ``{estimate, stderr, rel_stderr, iterations}``. ``path=None``
     keeps the cache in-memory (tests / ephemeral services). Writes replace
     the JSON file atomically, matching the runner-ledger durability story.
+    The on-disk form is ``{"schema": SCHEMA_VERSION, "entries": {...}}``;
+    files with a different (or missing — pre-versioning) schema are
+    silently treated as empty, because their keys used template *names*
+    and must not alias today's canonical-hash keys.
     """
 
     def __init__(self, path: str | None = None):
@@ -109,14 +140,21 @@ class EstimateCache:
         if path and os.path.isfile(path):
             try:
                 with open(path) as f:
-                    self._mem = json.load(f)
+                    data = json.load(f)
             except (OSError, json.JSONDecodeError):
-                self._mem = {}
+                data = None
+            if (isinstance(data, dict)
+                    and data.get("schema") == SCHEMA_VERSION
+                    and isinstance(data.get("entries"), dict)):
+                self._mem = data["entries"]
 
     @staticmethod
-    def key(graph_fingerprint: str, template: str, engine: str, plan: str,
+    def key(graph_fingerprint: str, template, engine: str, plan: str,
             seed: int) -> str:
-        return f"{graph_fingerprint}:{template}:{engine}:{plan}:s{seed}"
+        """``template`` may be anything :meth:`TemplateSpec.of` accepts;
+        the key always carries its canonical hash."""
+        th = _template_key(template)
+        return f"{graph_fingerprint}:{th}:{engine}:{plan}:s{seed}"
 
     def get(self, key: str) -> dict | None:
         return self._mem.get(key)
@@ -143,7 +181,7 @@ class EstimateCache:
             os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
             tmp = self.path + ".tmp"
             with open(tmp, "w") as f:
-                json.dump(self._mem, f)
+                json.dump({"schema": SCHEMA_VERSION, "entries": self._mem}, f)
             os.replace(tmp, self.path)
 
     def __len__(self) -> int:

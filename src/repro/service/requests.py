@@ -1,11 +1,16 @@
 """Request API for the multi-tenant counting service.
 
-A :class:`CountRequest` names a registered graph, a template, an engine/plan
-choice, and a *precision contract*: either a relative-standard-error target
-(``rel_stderr``, adaptive stopping) or a fixed iteration cap (``max_iters``),
-or both (stop at whichever comes first). The service answers with a
-:class:`RequestResult` carrying the estimate, its standard error, and a 95%
-confidence interval computed from the per-iteration color-coding samples.
+A :class:`CountRequest` names a registered graph, a template — a registry
+name (sugar), a :class:`~repro.core.templates.TemplateSpec`, a
+TreeTemplate, or a raw edge list; arbitrary user trees are first-class —
+an engine/plan choice, and a *precision contract*: either a
+relative-standard-error target (``rel_stderr``, adaptive stopping) or a
+fixed iteration cap (``max_iters``), or both (stop at whichever comes
+first). The service answers with a :class:`RequestResult` carrying the
+estimate, its standard error, and a 95% confidence interval computed from
+the per-iteration color-coding samples. Request identity — for dispatch
+groups and every cache — is the template's *canonical hash*, never its
+name: two spellings of the same rooted tree share one sample stream.
 
 Status lifecycle (see ``repro.service`` package docstring for the full
 narrative)::
@@ -21,6 +26,8 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
+
+from repro.core.templates import TemplateSpec
 
 __all__ = ["RequestStatus", "CountRequest", "RequestResult", "RunningStat"]
 
@@ -46,7 +53,7 @@ class CountRequest:
     """
 
     graph: str
-    template: str
+    template: object          # str name | TemplateSpec | TreeTemplate | edges
     engine: str = "pgbsc"
     plan: str = "optimized"
     rel_stderr: float | None = None
@@ -54,7 +61,27 @@ class CountRequest:
     min_iters: int = 4
     seed: int = 0
 
+    @property
+    def spec(self) -> TemplateSpec:
+        """The request's template as a :class:`TemplateSpec` (coerced once;
+        registry names are sugar resolved here)."""
+        sp = self.__dict__.get("_spec")
+        if sp is None or self.__dict__.get("_spec_src") is not self.template:
+            sp = TemplateSpec.of(self.template)
+            self.__dict__["_spec"] = sp
+            self.__dict__["_spec_src"] = self.template
+        return sp
+
+    @property
+    def template_name(self) -> str:
+        """Human-readable label (names when given, hash prefix otherwise)."""
+        if isinstance(self.template, str):
+            return self.template
+        return self.spec.display_name
+
     def validate(self) -> None:
+        self.spec.tree       # coerce + validate: unknown names raise
+        #  KeyError, malformed edge lists a descriptive ValueError
         if self.rel_stderr is None and self.max_iters is None:
             raise ValueError("request needs a precision target: "
                              "rel_stderr and/or max_iters")
@@ -65,9 +92,10 @@ class CountRequest:
 
     def group_key(self, graph_fingerprint: str) -> tuple:
         """Requests sharing this key can consume one sample stream: same
-        graph content, template, engine, plan, and coloring seed."""
-        return (graph_fingerprint, self.template, self.engine, self.plan,
-                self.seed)
+        graph content, same *canonical* template (names never enter — two
+        spellings of one tree share a group), engine, plan, and seed."""
+        return (graph_fingerprint, self.spec.canonical_hash, self.engine,
+                self.plan, self.seed)
 
 
 @dataclasses.dataclass

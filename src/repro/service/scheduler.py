@@ -3,11 +3,13 @@
 The scheduler turns a set of live :class:`CountRequest`\\ s into the minimum
 number of device dispatches:
 
-* requests sharing a ``(graph fingerprint, template, engine, plan, seed)``
-  key are attached to one **dispatch group** with a single deterministic
-  sample stream (iteration ids 0, 1, 2, ... colored by
+* requests sharing a ``(graph fingerprint, template canonical hash,
+  engine, plan, seed)`` key are attached to one **dispatch group** with a
+  single deterministic sample stream (iteration ids 0, 1, 2, ... colored by
   ``fold_in(seed, id)``), so N concurrent tenants asking the same question
-  cost the same device work as one;
+  cost the same device work as one — template identity is the *canonical
+  hash*, so a registry name and a relabeled edge list of the same tree are
+  the same question;
 * each scheduling round extends every active group by up to ``round_size``
   iterations through ONE ``count_iterations_batch`` dispatch (via the
   fault-tolerant :class:`EstimatorRunner` ledger, so a killed service
@@ -31,7 +33,6 @@ import dataclasses
 
 from repro.core.colorsets import colorful_probability
 from repro.core.runner import EstimatorRunner, engine_counter
-from repro.core.templates import get_template
 from repro.graph.structure import Graph
 from repro.service.cache import EngineCache, EstimateCache
 from repro.service.requests import (CountRequest, RequestResult,
@@ -148,18 +149,18 @@ class CountingService:
         """Queue a request; returns its id. Served instantly (status DONE,
         ``from_cache``) when the persistent estimate cache already holds an
         answer meeting the request's precision contract."""
-        request.validate()
+        request.validate()               # fails fast on unknown/invalid
+        #  templates too (names are sugar; arbitrary edge lists first-class)
         if request.graph not in self.graphs:
             raise KeyError(f"unknown graph {request.graph!r}; "
                            f"registered: {sorted(self.graphs)}")
-        get_template(request.template)   # fail fast on unknown templates
         self._seq += 1
         rid = f"r{self._seq:04d}"
         st = _ReqState(request=request, status=RequestStatus.PENDING,
                        stat=RunningStat(), t_submit=time.time())
         st._default_cap = self.default_max_iters
         fp = self.graphs[request.graph].fingerprint
-        ck = EstimateCache.key(fp, request.template, request.engine,
+        ck = EstimateCache.key(fp, request.spec, request.engine,
                                request.plan, request.seed)
         ent = self.estimate_cache.satisfies(ck, request.rel_stderr,
                                             request.max_iters,
@@ -199,14 +200,17 @@ class CountingService:
         key = st.request.group_key(g.fingerprint)
         grp = self._groups.get(key)
         if grp is None:
-            t = get_template(st.request.template)
+            spec = st.request.spec
+            t = spec.tree
             eng = self.engine_cache.get(
-                g, st.request.template, st.request.engine,
+                g, spec, st.request.engine,
                 st.request.plan, **self.engine_kw)
             scale = 1.0 / (t.automorphisms * colorful_probability(t.k))
+            # canonical hash, not name: two spellings of one tree resume
+            # the same ledger
             ledger_dir = os.path.join(
                 self.ledger_root,
-                f"{g.fingerprint[:12]}_{st.request.template}_"
+                f"{g.fingerprint[:12]}_{spec.canonical_hash}_"
                 f"{st.request.engine}_{st.request.plan}_s{st.request.seed}")
             runner = EstimatorRunner(
                 engine_counter(eng, seed=st.request.seed,
@@ -249,7 +253,7 @@ class CountingService:
             from_cache=False, shared_group=st.shared_group,
             seconds=time.time() - st.t_submit)
         g = self.graphs[st.request.graph]
-        ck = EstimateCache.key(g.fingerprint, st.request.template,
+        ck = EstimateCache.key(g.fingerprint, st.request.spec,
                                st.request.engine, st.request.plan,
                                st.request.seed)
         prev = self.estimate_cache.get(ck)

@@ -61,9 +61,6 @@ def build_ddp_step(arch: ArchConfig, mesh: Mesh,
         return {"params": new_params, "opt": new_opt,
                 "residual": residual}, metrics
 
-    state_spec = jax.tree_util.tree_map(lambda _: P(), {"x": 0})  # template
-    del state_spec
-
     def batch_specs(batch):
         return jax.tree_util.tree_map(
             lambda x: P(axis) if getattr(x, "ndim", 0) >= 1 else P(), batch)

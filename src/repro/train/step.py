@@ -8,12 +8,11 @@ state via jax.eval_shape — nothing allocated).
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, LMConfig
+from repro.configs.base import ArchConfig
 from repro.models import gnn as gnn_mod
 from repro.models import equivariant as eq_mod
 from repro.models import recsys as rec_mod

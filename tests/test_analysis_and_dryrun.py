@@ -7,7 +7,7 @@ import os
 
 import pytest
 
-from repro.analysis.hlo import collective_bytes, collective_summary, count_ops
+from repro.analysis.hlo import collective_summary, count_ops
 from repro.analysis.roofline import RooflineTerms, model_flops
 from repro.configs import ARCH_IDS, get_config
 

@@ -8,7 +8,7 @@ asserted exactly.
 import numpy as np
 import pytest
 
-from repro.core import (CountingEngine, build_engine,
+from repro.core import (build_engine,
                         count_colorful_embeddings, count_subgraphs_exact,
                         get_template)
 from repro.graph import Graph, erdos_renyi, grid_2d, path_graph, star

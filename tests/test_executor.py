@@ -211,7 +211,6 @@ class TestColorsetChunking:
 
     def test_chunked_batched_matches(self):
         g = erdos_renyi(30, 3.0, seed=5)
-        plan = BINARY12.plan_dedup
         budget = 2200 * g.n * 4
         e = build_engine(g, BINARY12, "pgbsc", plan="dedup",
                          memory_budget_bytes=budget)

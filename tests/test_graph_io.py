@@ -4,7 +4,7 @@ import os
 
 import numpy as np
 
-from repro.graph import Graph, erdos_renyi
+from repro.graph import erdos_renyi
 from repro.graph.io import (load_cached, load_edge_list, load_graph_npz,
                             save_edge_list, save_graph_npz)
 

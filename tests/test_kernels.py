@@ -1,12 +1,11 @@
 """Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
 swept over shapes, graph families, and block sizes."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.graph import Graph, erdos_renyi, grid_2d, rmat, star
+from repro.graph import erdos_renyi, grid_2d, rmat, star
 from repro.graph.reorder import apply_order, rcm_order
 from repro.kernels.ema.ops import ema, ema_xla
 from repro.kernels.ema.pallas_ema import ema_pallas

@@ -3,7 +3,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import reduced_config
 from repro.models.equivariant import (bessel_basis, init_nequip,

@@ -10,7 +10,7 @@ from repro.configs import ARCH_IDS, get_config, reduced_config
 from repro.data.synthetic import make_batch, statics_for
 from repro.optim.optimizer import AdamWConfig
 from repro.train.step import (build_serve_step, build_train_step,
-                              concrete_train_state, loss_fn_for)
+                              concrete_train_state)
 
 LM_ARCHS = [a for a in ARCH_IDS if get_config(a).family == "lm"]
 GNN_ARCHS = [a for a in ARCH_IDS if get_config(a).family == "gnn"]

@@ -8,9 +8,9 @@ pytest.importorskip(
     reason="optional dev dep (requirements-dev.txt); skip, don't error")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (build_engine, count_colorful_embeddings,
-                        get_template, rank_colorset, tree_automorphisms,
-                        unrank_colorset)
+from repro.core import (TemplateSpec, build_engine,
+                        count_colorful_embeddings, get_template,
+                        rank_colorset, tree_automorphisms, unrank_colorset)
 from repro.core.colorsets import colorful_probability, split_tables
 from repro.core.templates import TreeTemplate
 from repro.graph import Graph
@@ -84,6 +84,38 @@ class TestTemplateProperties:
     def test_dedup_preserves_root(self, t):
         assert t.plan_dedup.nodes[-1].size == t.k
         assert t.plan_dedup.n_nodes <= t.plan.n_nodes
+
+
+class TestTemplateSpecProperties:
+    @given(random_tree(), st.integers(0, 10))
+    def test_json_roundtrip(self, t, root_draw):
+        root = root_draw % t.k
+        spec = TemplateSpec(edges=t.edges, root=root, name=t.name)
+        back = TemplateSpec.from_json(spec.to_json())
+        assert back == spec
+        assert back.canonical_hash == spec.canonical_hash
+        assert back.k == t.k and back.root == root
+
+    @given(random_tree())
+    def test_canonical_hash_is_label_invariant(self, t):
+        # reverse the vertex labels (and map the root along): same rooted
+        # tree, so the canonical content hash must not move
+        relabel = {v: t.k - 1 - v for v in range(t.k)}
+        spec = TemplateSpec(edges=t.edges, root=0)
+        mirrored = TemplateSpec(
+            edges=tuple((relabel[u], relabel[v]) for u, v in t.edges),
+            root=relabel[0])
+        assert mirrored.canonical_hash == spec.canonical_hash
+
+    @given(random_tree(min_k=2, max_k=7))
+    @settings(max_examples=20, deadline=None)
+    def test_automorphisms_match_brute_force(self, t):
+        from itertools import permutations
+        eset = {frozenset(e) for e in t.edges}
+        brute = sum(
+            1 for perm in permutations(range(t.k))
+            if all(frozenset((perm[a], perm[b])) in eset for a, b in eset))
+        assert t.automorphisms == brute
 
 
 class TestEngineProperties:

@@ -1,0 +1,261 @@
+"""Query API: TemplateSpec, fused multi-template plans, count/count_many,
+canonical-hash identity through the service stack."""
+
+import json
+from math import factorial
+
+import numpy as np
+import pytest
+
+from repro.api import (CountQuery, TemplateSpec, compile_query, count,
+                       count_many)
+from repro.core import (count_subgraphs_exact, compile_fused_plan,
+                        get_template)
+from repro.core.motif_features import motif_features
+from repro.core.templates import STANDARD_TEMPLATES, TreeTemplate
+from repro.graph import erdos_renyi
+from repro.service import (CountingService, CountRequest, EngineCache,
+                           EstimateCache)
+from repro.service.cache import SCHEMA_VERSION
+
+BUNDLE = ("u5", "u7", "path5", "star5")
+
+
+def _graph(n=40, deg=4.0, seed=0):
+    return erdos_renyi(n, deg, seed=seed)
+
+
+class TestTemplateSpec:
+    def test_json_roundtrip(self):
+        spec = TemplateSpec(edges=((0, 1), (1, 2), (1, 3)), root=2,
+                            name="chair")
+        back = TemplateSpec.from_json(spec.to_json())
+        assert back == spec
+        assert back.canonical_hash == spec.canonical_hash
+        assert back.k == 4 and back.root == 2
+
+    def test_coercion_sugar(self):
+        by_name = TemplateSpec.of("u5")
+        assert by_name.k == 5 and by_name.name == "u5"
+        by_tree = TemplateSpec.of(get_template("u5"))
+        assert by_tree.canonical_hash == by_name.canonical_hash
+        by_edges = TemplateSpec.of([(0, 1), (1, 2)])
+        assert by_edges.k == 3
+        assert TemplateSpec.of(by_edges) is by_edges
+
+    def test_canonical_hash_ignores_labels_and_names(self):
+        a = TemplateSpec.of("path5")
+        b = TemplateSpec(edges=((4, 3), (3, 2), (2, 1), (1, 0)), root=4,
+                         name="whatever")
+        assert a.canonical_hash == b.canonical_hash
+        assert a.canonical_hash != TemplateSpec.of("star5").canonical_hash
+
+    def test_root_changes_rooted_identity(self):
+        end = TemplateSpec(edges=((0, 1), (1, 2)), root=0)
+        mid = TemplateSpec(edges=((0, 1), (1, 2)), root=1)
+        assert end.canonical_hash != mid.canonical_hash
+
+    def test_edge_string_parsing(self):
+        spec = TemplateSpec.from_edge_string("0-1,1-2,1-3@1")
+        assert spec.root == 1 and spec.k == 4
+        with pytest.raises(ValueError):
+            TemplateSpec.from_edge_string("0:1")
+
+    def test_invalid_specs_raise_eagerly(self):
+        with pytest.raises(ValueError):
+            TemplateSpec.of([(0, 1), (1, 2), (2, 0)])
+
+
+class TestTemplateValidation:
+    """TreeTemplate.__init__ rejects garbage with clear errors (satellite)."""
+
+    @pytest.mark.parametrize("edges,kw,fragment", [
+        ([(0, 1), (1, 2), (2, 0)], {}, "cycle"),
+        ([(0, 1), (0, 1)], {}, "cycle"),
+        ([(0, 0)], {}, "self-loop"),
+        ([(0, 1), (2, 3)], {}, "disconnected"),
+        ([(0, 1)], {"root": 5}, "out of range"),
+        ([(0, 1)], {"root": -1}, "out of range"),
+        ([(0, -1)], {}, "negative"),
+        ([(0, 2)], {}, "skips"),
+    ])
+    def test_rejections(self, edges, kw, fragment):
+        with pytest.raises(ValueError, match=fragment):
+            TreeTemplate(edges, **kw)
+
+    def test_valid_edge_cases_still_build(self):
+        assert TreeTemplate([]).k == 1            # single vertex
+        assert TreeTemplate([(1, 0)]).k == 2      # orientation-insensitive
+
+
+class TestDynamicTemplateNames:
+    def test_dynamic_paths_and_stars(self):
+        assert get_template("path6").k == 6
+        assert get_template("star9").automorphisms == factorial(8)
+        assert get_template("path6") is get_template("path6")  # memoized
+
+    def test_registry_takes_precedence(self):
+        assert get_template("path5") is STANDARD_TEMPLATES["path5"]
+
+    def test_keyerror_mentions_dynamic_forms(self):
+        with pytest.raises(KeyError) as ei:
+            get_template("nope")
+        assert "path{k}" in str(ei.value) and "star{k}" in str(ei.value)
+        with pytest.raises(KeyError):
+            get_template("path1")                 # k < 2 is not a template
+
+
+class TestFusedPlan:
+    def test_cross_template_sharing_shrinks_plan(self):
+        trees = [get_template(n) for n in ("u5", "path5", "star5")]
+        fp = compile_fused_plan(trees)
+        assert fp.plan.n_nodes < sum(t.plan_optimized.n_nodes for t in trees)
+        assert len(fp.roots) == 3
+        for r, t in zip(fp.roots, trees):
+            assert fp.plan.nodes[r].size == t.k
+
+    def test_mixed_k_rejected(self):
+        with pytest.raises(ValueError, match="equal k"):
+            compile_fused_plan(["u5", "u7"])
+
+    def test_duplicate_templates_share_one_root(self):
+        fp = compile_fused_plan(["u5", "u5"])
+        assert fp.roots[0] == fp.roots[1]
+
+
+class TestCountManyAcceptance:
+    """count_many over the u5/u7/path5/star5 bundle matches per-template
+    count to 1e-6 while dispatching strictly fewer SpMM column-ops."""
+
+    def test_matches_solo_with_fewer_spmm_cols(self):
+        g = _graph(60, 5.0, seed=0)
+        solo_results, solo_cols = [], 0
+        for name in BUNDLE:
+            cq = compile_query(g, CountQuery(templates=[name], max_iters=10,
+                                             seed=3))
+            solo_results.append(cq.run()[0])
+            solo_cols += sum(e.n_spmm_cols_dispatched for e in cq.engines)
+        fused = compile_query(g, CountQuery(templates=list(BUNDLE),
+                                            max_iters=10, seed=3))
+        fused_results = fused.run()
+        fused_cols = sum(e.n_spmm_cols_dispatched for e in fused.engines)
+        for fr, sr in zip(fused_results, solo_results):
+            assert fr.iterations == sr.iterations == 10
+            assert fr.estimate == pytest.approx(sr.estimate, rel=1e-6)
+            assert fr.stderr == pytest.approx(sr.stderr, rel=1e-5, abs=1e-9)
+        assert fused_cols < solo_cols, (fused_cols, solo_cols)
+        # the k=5 trio shares one engine, u7 runs alone
+        assert len(fused.engines) == 2
+
+    def test_count_near_exact(self):
+        g = _graph(30, 4.0, seed=0)
+        t = get_template("u3")
+        res = count(g, "u3", max_iters=150, seed=1)
+        assert res.estimate == pytest.approx(count_subgraphs_exact(g, t),
+                                             rel=0.25)
+
+    def test_adaptive_target_and_cap(self):
+        g = _graph()
+        res = count(g, "u3", rel_stderr=0.5, max_iters=64, seed=0)
+        assert res.target_met and res.iterations <= 64
+        capped = count(g, "u3", max_iters=6, seed=0)
+        assert capped.iterations == 6
+
+    def test_engine_cache_shared_across_queries(self):
+        g = _graph()
+        cache = EngineCache()
+        count(g, "u3", max_iters=4, engine_cache=cache)
+        count(g, TemplateSpec(edges=((0, 1), (1, 2))), max_iters=4,
+              engine_cache=cache)   # same tree, different spelling
+        assert cache.stats()["builds"] == 1
+
+    def test_count_many_mixed_inputs_in_order(self):
+        g = _graph()
+        results = count_many(
+            g, ["u3", [(0, 1), (1, 2), (1, 3)], get_template("path4")],
+            max_iters=4, seed=2)
+        assert len(results) == 3
+        assert all(np.isfinite(r.estimate) for r in results)
+        # order is preserved across k-groups (k=3 and two k=4 templates)
+        assert results[0].estimate == pytest.approx(
+            count(g, "u3", max_iters=4, seed=2).estimate, rel=1e-6)
+
+
+class TestMotifFeaturesFused:
+    def test_matches_per_template_loop(self):
+        g = _graph(30, 3.0, seed=2)
+        fused = motif_features(g, ["path4", "star4"], n_iters=4, seed=5,
+                               log1p=False)
+        solo = np.stack([
+            motif_features(g, [n], n_iters=4, seed=5, log1p=False)[:, 0]
+            for n in ("path4", "star4")], axis=1)
+        np.testing.assert_allclose(fused, solo, rtol=2e-5)
+
+
+class TestServiceSpecRequests:
+    def test_arbitrary_edge_list_round_trips(self, tmp_path):
+        """An arbitrary edge-list template submitted through the service
+        reaches a finished estimate end-to-end (acceptance)."""
+        g = _graph()
+        svc = CountingService(ledger_root=str(tmp_path), round_size=4)
+        svc.add_graph("g", g)
+        spec = TemplateSpec(edges=((0, 1), (1, 2), (1, 3)), name="chair")
+        rid = svc.submit(CountRequest("g", spec, max_iters=6))
+        res = svc.run()[rid]
+        assert res.iterations == 6 and np.isfinite(res.estimate)
+        direct = count(g, spec, max_iters=6, seed=0)
+        assert res.estimate == pytest.approx(direct.estimate, rel=1e-6)
+
+    def test_two_spellings_share_group_engine_and_ledger(self, tmp_path):
+        g = _graph()
+        svc = CountingService(ledger_root=str(tmp_path), round_size=4)
+        svc.add_graph("g", g)
+        relabeled = TemplateSpec(edges=((3, 2), (2, 1), (1, 0)), root=3)
+        r1 = svc.submit(CountRequest("g", "path4", max_iters=4))
+        r2 = svc.submit(CountRequest("g", relabeled, max_iters=4))
+        res = svc.run()
+        stats = svc.stats()
+        assert stats["groups"] == 1
+        assert stats["engine_cache"]["builds"] == 1
+        assert res[r1].estimate == res[r2].estimate
+        assert res[r2].shared_group
+
+    def test_submit_rejects_malformed_templates(self, tmp_path):
+        svc = CountingService(ledger_root=str(tmp_path))
+        svc.add_graph("g", _graph())
+        with pytest.raises(KeyError):
+            svc.submit(CountRequest("g", "not-a-template", max_iters=4))
+        with pytest.raises(ValueError, match="cycle"):
+            svc.submit(CountRequest(
+                "g", TemplateSpec(edges=((0, 1), (1, 2), (2, 0))),
+                max_iters=4))
+
+
+class TestEstimateCacheSchema:
+    def test_stale_schema_ignored_not_crashed(self, tmp_path):
+        p = tmp_path / "est.json"
+        # pre-versioning layout: flat name-keyed entries
+        p.write_text(json.dumps({"fp:u3:pgbsc:optimized:s0": {
+            "estimate": 1.0, "stderr": 0.1, "rel_stderr": 0.1,
+            "iterations": 8}}))
+        cache = EstimateCache(str(p))
+        assert len(cache) == 0
+
+    def test_current_schema_roundtrips(self, tmp_path):
+        p = str(tmp_path / "est.json")
+        cache = EstimateCache(p)
+        key = EstimateCache.key("fp", TemplateSpec.of("u3"), "pgbsc",
+                                "optimized", 0)
+        cache.put(key, {"estimate": 2.0, "stderr": 0.1, "rel_stderr": 0.05,
+                        "iterations": 16})
+        data = json.loads(open(p).read())
+        assert data["schema"] == SCHEMA_VERSION
+        again = EstimateCache(p)
+        assert again.get(key)["estimate"] == 2.0
+
+    def test_key_is_name_independent(self):
+        a = EstimateCache.key("fp", "path4", "pgbsc", "optimized", 0)
+        b = EstimateCache.key(
+            "fp", TemplateSpec(edges=((3, 2), (2, 1), (1, 0)), root=3),
+            "pgbsc", "optimized", 0)
+        assert a == b

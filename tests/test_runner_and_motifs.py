@@ -1,7 +1,6 @@
 """Fault-tolerant runner (single-device path) + motif features + data."""
 
 import os
-import tempfile
 
 import jax
 import numpy as np
@@ -91,8 +90,6 @@ class TestSyntheticData:
             for cell in arch.cells:
                 specs, _, _ = input_specs(arch, cell.name)
                 batch = make_batch(arch, cell.name, jax.random.PRNGKey(0))
-                flat_s = jax.tree_util.tree_flatten(specs)[0]
-                sdict = {jax.tree_util.tree_structure(specs): None}
                 # same tree structure and identical shapes/dtypes
                 bs = jax.tree_util.tree_map(
                     lambda x: (tuple(x.shape), str(x.dtype)), batch)

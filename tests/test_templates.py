@@ -3,7 +3,6 @@
 from itertools import combinations
 from math import comb, factorial
 
-import numpy as np
 import pytest
 
 from repro.core import (STANDARD_TEMPLATES, TreeTemplate, all_colorsets,
@@ -108,7 +107,6 @@ class TestAutomorphisms:
             for v in seq:
                 degree[v] += 1
             edges = []
-            ptr = 0
             leaves = sorted(i for i in range(k) if degree[i] == 1)
             import heapq
             heapq.heapify(leaves)
