@@ -1,4 +1,10 @@
-"""Roofline terms from a compiled dry-run artifact (TPU v5e targets).
+"""Roofline analysis: compiled-artifact terms and measured kernel placement.
+
+Two layers live here. :class:`KernelRoofline` + the ``spmm_ema_*`` traffic
+models place a *measured* kernel dispatch (fused vs unfused SpMM->eMA)
+against host peaks — benchmarks/bench_roofline.py drives them and commits
+the result as BENCH_roofline.json. The rest derives roofline terms from a
+compiled dry-run artifact (TPU v5e targets):
 
     compute    = HLO_FLOPs / (chips * 197e12)          [bf16 MXU]
     memory     = HLO_bytes / (chips * 819e9)           [HBM]
@@ -13,7 +19,8 @@ from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["RooflineTerms", "roofline_from_compiled", "model_flops"]
+__all__ = ["RooflineTerms", "roofline_from_compiled", "model_flops",
+           "KernelRoofline", "spmm_ema_flops", "spmm_ema_hbm_bytes"]
 
 PEAK_FLOPS = 197e12      # bf16 per chip
 HBM_BW = 819e9           # bytes/s per chip
@@ -80,6 +87,88 @@ def roofline_from_compiled(compiled, chips: int,
         collective_bytes=float(collective_bytes(text)),
         chips=chips,
     )
+
+
+@dataclasses.dataclass
+class KernelRoofline:
+    """Achieved-vs-peak placement of ONE measured kernel dispatch.
+
+    ``flops`` are the *useful* flops of the operation (nnz-based SpMM +
+    split FMAs — not the dense/one-hot flops a given implementation happens
+    to execute); ``hbm_bytes`` is that variant's modeled main-memory traffic.
+    Peaks come from host microbenchmarks (see bench_roofline), so the
+    fractions are comparable across variants on the same host.
+    """
+
+    name: str
+    flops: float
+    hbm_bytes: float
+    seconds: float
+    peak_flops: float
+    peak_bw: float
+
+    @property
+    def achieved_flops(self) -> float:
+        return self.flops / self.seconds if self.seconds > 0 else 0.0
+
+    @property
+    def achieved_bw(self) -> float:
+        """Modeled traffic delivered per second — the roofline y-axis for a
+        memory-bound kernel. A fused kernel that moves fewer bytes in less
+        time scores higher than its unfused pair here; a fusion that merely
+        shifts traffic without saving wall time does not."""
+        return self.hbm_bytes / self.seconds if self.seconds > 0 else 0.0
+
+    @property
+    def oi(self) -> float:
+        """Operational intensity (flops / byte)."""
+        return self.flops / self.hbm_bytes if self.hbm_bytes > 0 else 0.0
+
+    @property
+    def bound(self) -> str:
+        return ("compute" if self.oi * self.peak_bw > self.peak_flops
+                else "memory")
+
+    @property
+    def roof_fraction(self) -> float:
+        """Achieved flops as a fraction of the roofline at this OI."""
+        roof = min(self.peak_flops, self.oi * self.peak_bw)
+        return self.achieved_flops / roof if roof > 0 else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "name": self.name, "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes, "seconds": self.seconds,
+            "achieved_gflops": self.achieved_flops / 1e9,
+            "achieved_gbps": self.achieved_bw / 1e9,
+            "oi": self.oi, "bound": self.bound,
+            "roof_fraction": self.roof_fraction,
+        }
+
+
+def spmm_ema_flops(b: int, e: int, n: int, c_p: int, s: int, l: int) -> int:
+    """Useful flops of one plan-node step over a coloring batch ``b``:
+    nnz-based SpMM (2 flops per edge per passive color set) plus the split
+    FMAs (2 flops per vertex per (set, split))."""
+    return b * (2 * e * c_p + 2 * n * s * l)
+
+
+def spmm_ema_hbm_bytes(b: int, n: int, c_a: int, c_p: int, s: int,
+                       adj_bytes: int, itemsize: int, *,
+                       fused: bool, adj_passes: int = 1) -> int:
+    """Modeled HBM traffic of one plan-node step (tables + adjacency).
+
+    Both variants read the active and passive tables and write the output
+    table; the unfused pair additionally round-trips the ``(b, c_p, n)``
+    neighbor-sum table through HBM (SpMM writes it, eMA reads it back) —
+    exactly the traffic the fused kernel keeps in VMEM. The adjacency
+    stream is charged ``adj_passes`` times (the fused kernel re-streams it
+    once per batch block).
+    """
+    tables = b * n * (c_a + c_p + s)
+    if not fused:
+        tables += 2 * b * n * c_p
+    return tables * itemsize + adj_bytes * adj_passes
 
 
 def model_flops(arch, cell) -> float:

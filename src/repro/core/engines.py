@@ -41,6 +41,7 @@ from repro.core.templates import (ExecutionPlan, as_template,
                                   compile_fused_plan)
 from repro.graph.structure import Graph
 from repro.kernels.ema import ops as ema_ops
+from repro.kernels.fused import ops as fused_ops
 from repro.kernels.spmm import ops as spmm_ops
 
 __all__ = ["CountingEngine", "build_engine", "ENGINES"]
@@ -135,7 +136,9 @@ class CountingEngine:
                  interpret: bool = True, dedup: bool = False,
                  plan: str | None = None, dtype=jnp.float32,
                  batch_size: int | None = None,
-                 memory_budget_bytes: int | None = None):
+                 memory_budget_bytes: int | None = None,
+                 fuse_spmm_ema: bool = False,
+                 autotune_blocks: bool = False):
         if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine!r}")
         if isinstance(template, (list, tuple)):
@@ -177,6 +180,9 @@ class CountingEngine:
             self.roots = (self.plan.n_nodes - 1,)
         self.use_pallas_ema = use_pallas_ema
         self.interpret = interpret
+        self.autotune_blocks = autotune_blocks
+        self.fuse_spmm_ema = bool(fuse_spmm_ema and engine == "pgbsc")
+        fused_nodes = self._fused_candidates() if self.fuse_spmm_ema else ()
 
         # budget -> (derived batch size, liveness schedule, chunking); an
         # explicit batch_size only overrides the batch, not the schedule.
@@ -186,7 +192,8 @@ class CountingEngine:
             self.plan, self.k, g.n,
             memory_budget_bytes=memory_budget_bytes, dtype=dtype,
             passive_cache=(engine != "fascia"),
-            allow_chunking=(engine == "pgbsc"), keep=keep)
+            allow_chunking=(engine == "pgbsc"), keep=keep,
+            fused=fused_nodes)
         self.schedule = self.exec_choice.schedule
         self.batch_size = int(batch_size if batch_size is not None
                               else self.exec_choice.batch_size)
@@ -202,6 +209,34 @@ class CountingEngine:
         self.n_colorings_dispatched = 0
         self.n_spmm_cols_dispatched = 0
 
+    def _fused_candidates(self) -> tuple[int, ...]:
+        """Plan nodes eligible for the fused SpMM->eMA kernel.
+
+        A node is fused when (a) it is the ONLY consumer of its passive
+        child's neighbor sums — fusing a shared passive would recompute the
+        SpMM per consumer, forfeiting the y-cache/fused-plan dedup win — and
+        (b) its resident tables fit one VMEM grid step, and (c) the table
+        dtype runs on the kernel path in this mode (otherwise the explicit
+        XLA fallback would materialize y and the memory model would lie).
+        """
+        if not ema_ops.pallas_supports_dtype(self.dtype, self.interpret):
+            return ()
+        uses: dict[int, int] = {}
+        for node in self.plan.nodes:
+            if not node.is_leaf:
+                uses[node.passive] = uses.get(node.passive, 0) + 1
+        out = []
+        for idx, node in enumerate(self.plan.nodes):
+            if node.is_leaf or uses[node.passive] != 1:
+                continue
+            t = node.size
+            t_a = self.plan.nodes[node.active].size
+            if fused_ops.fused_fits_vmem(
+                    comb(self.k, t_a), comb(self.k, t - t_a),
+                    comb(self.k, t), l=comb(t, t_a), dtype=self.dtype):
+                out.append(idx)
+        return tuple(out)
+
     # -------------------------------------------------------- device state
     def _materialize(self) -> None:
         """Build device arrays and compiled callables (see :meth:`release`)."""
@@ -210,9 +245,13 @@ class CountingEngine:
             self._spmm_prep = spmm_ops.prepare(g, self.spmm_method,
                                                interpret=self.interpret)
             self._nbr = self._mask = None
+            self._fused_prep = (
+                fused_ops.prepare_fused(g, interpret=self.interpret)
+                if self.schedule.fused else None)
         else:
             nbr, mask = g.ell()
             self._spmm_prep = None
+            self._fused_prep = None
             self._nbr = jnp.asarray(nbr)
             self._mask = jnp.asarray(mask)
 
@@ -256,6 +295,7 @@ class CountingEngine:
                     pass
         self._count_fn = self._batch_fn = self._seeded_fn = None
         self._spmm_prep = None
+        self._fused_prep = None
         self._nbr = self._mask = None
         self._splits = {}
         self._chunk_packs = {}
@@ -442,24 +482,35 @@ class CountingEngine:
 
     def _build_pgbsc(self) -> Callable:
         splits, packs, prep = self._splits, self._chunk_packs, self._spmm_prep
+        fprep = self._fused_prep
         runner = pexec.PlanExecutor(self.plan, self.schedule)
+        autotune = self.autotune_blocks
 
         def passive_op(p_idx, m_p):
             # SpMM over *all* passive color sets at once (Algorithm 4 l.3);
             # with plan dedup, shared passive children reuse the result.
-            return spmm_ops.spmm(m_p, prep)
+            return spmm_ops.spmm(m_p, prep, autotune=autotune)
 
         def combine(idx, m_a, y_p):
             ia, ip = splits[idx]
             return ema_ops.ema(
                 m_a, y_p, ia, ip,
-                use_pallas=self.use_pallas_ema, interpret=self.interpret)
+                use_pallas=self.use_pallas_ema, interpret=self.interpret,
+                autotune=autotune)
 
         def combine_direct(idx, m_a, m_p):
-            # colorset-chunked node: the passive SpMM output is produced
-            # and consumed one C(k, t_p)-axis slice at a time
-            return ema_ops.ema_chunked(m_a, m_p, packs[idx],
-                                       lambda m: spmm_ops.spmm(m, prep))
+            # direct (no materialized y_p) nodes; chunking wins over fusion
+            # when the memory model assigned both (Schedule.fused_set doc)
+            if idx in packs:
+                # colorset-chunked node: the passive SpMM output is produced
+                # and consumed one C(k, t_p)-axis slice at a time
+                return ema_ops.ema_chunked(
+                    m_a, m_p, packs[idx],
+                    lambda m: spmm_ops.spmm(m, prep, autotune=autotune))
+            # fused node: SpMM and eMA in one Pallas launch — the
+            # (B, C(k,t_p), N) neighbor-sum table never leaves VMEM
+            ia, ip = splits[idx]
+            return fused_ops.fused_spmm_ema(m_a, m_p, ia, ip, fprep)
 
         def run(colors: jax.Array):
             # colors: (N,) or batched (B, N) — every step below is
@@ -561,6 +612,7 @@ class CountingEngine:
         cols = 0
         seen: set[int] = set()
         chunk_map = self.schedule.chunk_map
+        fused_set = self.schedule.fused_set
         for idx, node in enumerate(self.plan.nodes):
             if node.is_leaf:
                 continue
@@ -568,7 +620,7 @@ class CountingEngine:
             t_a = self.plan.nodes[node.active].size
             if self.engine == "fascia":
                 cols += comb(self.k, t) * comb(t, t_a)
-            elif chunk_map.get(idx, 1) > 1:
+            elif chunk_map.get(idx, 1) > 1 or idx in fused_set:
                 cols += comb(self.k, t - t_a)
             elif node.passive not in seen:
                 seen.add(node.passive)

@@ -69,6 +69,14 @@ class Schedule:
     ``chunks``
         ``(node idx, n_chunks)`` pairs for colorset-chunked internal nodes
         (absent = unchunked). Chunked nodes bypass the y-cache.
+    ``fused``
+        Internal nodes whose SpMM -> eMA pair runs as ONE fused Pallas
+        kernel (``kernels/fused``): the passive child table is consumed
+        directly tile-by-tile and the ``C(k,t_p) x N`` neighbor-sum table is
+        never materialized — the model charges such a step no y rows at all.
+        Fused nodes bypass the y-cache; a node listed in both ``chunks`` and
+        ``fused`` is treated as chunked (chunking wins, it exists because
+        even the fused footprint exceeded budget).
     ``passive_cache``
         Whether the walk materializes/caches the passive transform
         (SpMM / hoisted neighbor sum). False for FASCIA, whose neighbor
@@ -85,10 +93,15 @@ class Schedule:
     chunks: tuple[tuple[int, int], ...] = ()
     passive_cache: bool = True
     keep: tuple[int, ...] = ()
+    fused: tuple[int, ...] = ()
 
     @property
     def chunk_map(self) -> dict[int, int]:
         return dict(self.chunks)
+
+    @property
+    def fused_set(self) -> frozenset[int]:
+        return frozenset(self.fused)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,12 +136,13 @@ def _validate_order(plan, order) -> dict[int, int]:
 def liveness(plan, order, *, passive_cache: bool = True,
              chunks: dict[int, int] | None = None,
              keep: tuple[int, ...] = (),
+             fused: tuple[int, ...] = (),
              ) -> tuple[tuple[tuple[int, ...], ...],
                         tuple[tuple[int, ...], ...]]:
     """Last-use analysis -> (free_tables, free_y), parallel to ``order``.
 
     A node table's life ends at the latest of: every step consuming it as
-    the *active* child; every chunked/uncached step consuming it as the
+    the *active* child; every chunked/fused/uncached step consuming it as the
     *passive* child directly; the step that converts it into its cached
     y-entry (the first unchunked passive consumer in ``order``). A y-cache
     entry dies at its last unchunked passive consumer. The root table is
@@ -137,6 +151,7 @@ def liveness(plan, order, *, passive_cache: bool = True,
     """
     pos = _validate_order(plan, order)
     cmap = dict(chunks or {})
+    fset = frozenset(fused)
     n = plan.n_nodes
     table_last = {i: pos[i] for i in range(n)}
     y_steps: dict[int, list[int]] = {}
@@ -145,7 +160,7 @@ def liveness(plan, order, *, passive_cache: bool = True,
             continue
         s = pos[idx]
         table_last[node.active] = max(table_last[node.active], s)
-        direct = (not passive_cache) or cmap.get(idx, 1) > 1
+        direct = (not passive_cache) or cmap.get(idx, 1) > 1 or idx in fset
         if direct:
             table_last[node.passive] = max(table_last[node.passive], s)
         else:
@@ -172,6 +187,7 @@ def liveness(plan, order, *, passive_cache: bool = True,
 # --------------------------------------------------------------------------
 def _step_peaks(plan, k: int, order, free_tables, free_y, *,
                 passive_cache: bool, chunks: dict[int, int],
+                fused: frozenset[int] = frozenset(),
                 pair_block: int = PAIR_BLOCK) -> list[int]:
     """Modeled live table rows at each step of the walk (working buffers
     included). Mirrors :meth:`PlanExecutor.run` exactly, including the
@@ -208,6 +224,10 @@ def _step_peaks(plan, k: int, order, free_tables, free_y, *,
                 # one passive chunk, one pair-block term buffer, the output
                 chunk_r = -(-rows[node.passive] // q)
                 peaks.append(cur() + chunk_r + pair_block + out_r)
+            elif idx in fused:
+                # fused SpMM->eMA kernel: the neighbor-sum table lives only
+                # in VMEM scratch — no HBM rows beyond the output table
+                peaks.append(cur() + out_r)
             elif not passive_cache:
                 # FASCIA direct combine: the per-split neighbor sweep uses
                 # a working buffer as wide as the output
@@ -240,7 +260,8 @@ def simulate_peak_rows(plan, k: int, schedule: Schedule,
     """Modeled peak live table rows (1 row = one length-N float vector)."""
     peaks = _step_peaks(plan, k, schedule.order, schedule.free_tables,
                         schedule.free_y, passive_cache=schedule.passive_cache,
-                        chunks=schedule.chunk_map, pair_block=pair_block)
+                        chunks=schedule.chunk_map, fused=schedule.fused_set,
+                        pair_block=pair_block)
     return max(peaks) if peaks else 0
 
 
@@ -285,7 +306,8 @@ def keep_everything_bytes(plan, k: int, n: int, batch: int = 1,
 # --------------------------------------------------------------------------
 def _greedy_order(plan, k: int, *, passive_cache: bool,
                   chunks: dict[int, int],
-                  keep: tuple[int, ...] = ()) -> list[int]:
+                  keep: tuple[int, ...] = (),
+                  fused: frozenset[int] = frozenset()) -> list[int]:
     """Greedy list scheduling: repeatedly evaluate the ready internal node
     whose modeled step peak (then post-step live size) is smallest.
 
@@ -307,7 +329,8 @@ def _greedy_order(plan, k: int, *, passive_cache: bool,
     for idx in internal:
         node = plan.nodes[idx]
         refs[buf(node.active)] = refs.get(buf(node.active), 0) + 1
-        direct = (not passive_cache) or chunks.get(idx, 1) > 1
+        direct = (not passive_cache) or chunks.get(idx, 1) > 1 \
+            or idx in fused
         if direct:
             refs[buf(node.passive)] = refs.get(buf(node.passive), 0) + 1
         else:
@@ -331,13 +354,15 @@ def _greedy_order(plan, k: int, *, passive_cache: bool,
         q = chunks.get(idx, 1)
         if q > 1:
             peak = cur + -(-rows[node.passive] // q) + PAIR_BLOCK + out_r
+        elif idx in fused:
+            peak = cur + out_r
         elif not passive_cache:
             peak = cur + 2 * out_r
         else:
             creates = node.passive not in live_y
             peak = cur + (rows[node.passive] if creates else 0) + out_r
         after = cur + out_r
-        direct = (not passive_cache) or q > 1
+        direct = (not passive_cache) or q > 1 or idx in fused
         dead: set[object] = set()
         if refs.get(buf(node.active), 0) == 1:
             dead.add(buf(node.active))
@@ -361,7 +386,7 @@ def _greedy_order(plan, k: int, *, passive_cache: bool,
         pick = min(ready, key=lambda i: step_cost(i) + (i,))
         node = plan.nodes[pick]
         q = chunks.get(pick, 1)
-        direct = (not passive_cache) or q > 1
+        direct = (not passive_cache) or q > 1 or pick in fused
 
         def consume(b: object) -> None:
             refs[b] = refs.get(b, 0) - 1
@@ -389,33 +414,40 @@ def compute_schedule(plan, k: int | None = None, *,
                      passive_cache: bool = True,
                      chunks: dict[int, int] | None = None,
                      order_mode: str = "auto",
-                     keep: tuple[int, ...] = ()) -> Schedule:
+                     keep: tuple[int, ...] = (),
+                     fused: tuple[int, ...] = ()) -> Schedule:
     """Build a :class:`Schedule` for ``plan``.
 
     ``order_mode``: ``"program"`` keeps the plan's own post-order;
     ``"greedy"`` uses the min-peak list scheduler; ``"auto"`` (default)
     simulates both and keeps the one with the smaller modeled peak.
-    ``keep`` lists extra output nodes never to free (fused-plan roots).
+    ``keep`` lists extra output nodes never to free (fused-plan roots);
+    ``fused`` lists nodes running the fused SpMM->eMA kernel (their
+    neighbor-sum table never reaches HBM — see :class:`Schedule`).
     """
     k = k or plan.k
     cmap = dict(chunks or {})
     keep = tuple(sorted(set(keep)))
+    fused = tuple(sorted(set(fused)))
+    fset = frozenset(fused)
     candidates: list[tuple[int, ...]] = []
     if order_mode in ("program", "auto"):
         candidates.append(tuple(range(plan.n_nodes)))
     if order_mode in ("greedy", "auto"):
         candidates.append(tuple(_greedy_order(
-            plan, k, passive_cache=passive_cache, chunks=cmap, keep=keep)))
+            plan, k, passive_cache=passive_cache, chunks=cmap, keep=keep,
+            fused=fset)))
     if not candidates:
         raise ValueError(f"unknown order_mode {order_mode!r}")
     best: Schedule | None = None
     best_peak: int | None = None
     for order in candidates:
         ft, fy = liveness(plan, order, passive_cache=passive_cache,
-                          chunks=cmap, keep=keep)
+                          chunks=cmap, keep=keep, fused=fused)
         sched = Schedule(order=order, free_tables=ft, free_y=fy,
                          chunks=tuple(sorted(cmap.items())),
-                         passive_cache=passive_cache, keep=keep)
+                         passive_cache=passive_cache, keep=keep,
+                         fused=fused)
         peak = simulate_peak_rows(plan, k, sched)
         if best_peak is None or peak < best_peak:
             best, best_peak = sched, peak
@@ -430,11 +462,14 @@ def pick_execution(plan, k: int, n: int, *,
                    dtype=np.float32, max_batch: int = MAX_AUTO_BATCH,
                    passive_cache: bool = True,
                    allow_chunking: bool = True,
-                   keep: tuple[int, ...] = ()) -> ExecutionChoice:
+                   keep: tuple[int, ...] = (),
+                   fused: tuple[int, ...] = ()) -> ExecutionChoice:
     """Turn one ``memory_budget_bytes`` knob into (batch size, schedule).
 
     The batch is the largest B with ``B * peak(batch=1) <= budget`` (capped
-    at ``max_batch``). If even B=1 exceeds the budget and ``allow_chunking``,
+    at ``max_batch``). ``fused`` nodes run the fused SpMM->eMA kernel and
+    are charged no neighbor-sum rows, so the same budget admits a larger
+    batch. If even B=1 exceeds the budget and ``allow_chunking``,
     passive-axis chunk counts are doubled node by node — always at the step
     realizing the current peak — until the modeled peak fits or every
     chunkable node is at single-row chunks (the irreducible floor of
@@ -444,7 +479,9 @@ def pick_execution(plan, k: int, n: int, *,
     budget = memory_budget_bytes if memory_budget_bytes is not None \
         else DEFAULT_MEMORY_BUDGET_BYTES
     itemsize = np.dtype(dtype).itemsize
-    sched = compute_schedule(plan, k, passive_cache=passive_cache, keep=keep)
+    fused = tuple(sorted(set(fused)))
+    sched = compute_schedule(plan, k, passive_cache=passive_cache, keep=keep,
+                             fused=fused)
     per1 = simulate_peak_rows(plan, k, sched) * n * itemsize
     if per1 <= budget:
         batch = max(1, min(max_batch, budget // max(per1, 1)))
@@ -457,9 +494,10 @@ def pick_execution(plan, k: int, n: int, *,
 
     def evaluate(chunk_map):
         s = compute_schedule(plan, k, passive_cache=passive_cache,
-                             chunks=chunk_map, keep=keep)
+                             chunks=chunk_map, keep=keep, fused=fused)
         p = _step_peaks(plan, k, s.order, s.free_tables, s.free_y,
-                        passive_cache=passive_cache, chunks=s.chunk_map)
+                        passive_cache=passive_cache, chunks=s.chunk_map,
+                        fused=s.fused_set)
         return s, p, max(p)
 
     sched, peaks, peak = evaluate(cmap)
@@ -507,8 +545,9 @@ class PlanExecutor:
       ``passive_cache=True``;
     * ``combine(idx, m_a, y_p)``: eMA of the active table with the cached
       transform;
-    * ``combine_direct(idx, m_a, m_p)``: used for chunked nodes and for
-      cache-less walks (FASCIA) — consumes the passive *table* directly;
+    * ``combine_direct(idx, m_a, m_p)``: used for chunked nodes, fused
+      SpMM->eMA nodes, and cache-less walks (FASCIA) — consumes the passive
+      *table* directly (the engine picks chunked/fused kernel per node);
     * ``on_step(step, live_bytes)``: optional instrumentation hook called
       twice per step (post-compute and post-free) with the live table bytes
       (unique buffers only), so measured peaks can be checked against
@@ -544,6 +583,7 @@ class PlanExecutor:
         the schedule must have been built with ``keep=`` covering it."""
         plan, sched = self.plan, self.schedule
         chunks = sched.chunk_map
+        fset = sched.fused_set
         if sched.passive_cache and passive_op is None:
             raise ValueError("schedule expects a passive_op "
                              "(built with passive_cache=True)")
@@ -565,7 +605,8 @@ class PlanExecutor:
                 tables[idx] = leaf
             else:
                 m_a = tables[node.active]
-                direct = (not sched.passive_cache) or chunks.get(idx, 1) > 1
+                direct = (not sched.passive_cache) \
+                    or chunks.get(idx, 1) > 1 or idx in fset
                 if direct:
                     tables[idx] = combine_direct(idx, m_a,
                                                  tables[node.passive])

@@ -3,7 +3,11 @@
 The XLA path scans over the L splits; each step is two row-gathers plus a
 fused multiply-add over the full (S, N) tile — the direct JAX transcription of
 paper Algorithm 4 line 7. The Pallas path keeps child tables resident in VMEM
-(see pallas_ema.py) and is selected when they fit.
+(see pallas_ema.py) and is selected when (a) the caller asked for it, (b) the
+table dtype is supported by the kernel in the current mode, and (c) the
+resident tables fit the VMEM budget at the actual block sizes chosen. A dtype
+the kernel does not support falls back to the XLA path *explicitly* — the
+Pallas path never downcasts.
 """
 
 from __future__ import annotations
@@ -14,14 +18,30 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import autotune as _autotune
 from repro.kernels.ema.pallas_ema import ema_pallas
 
 __all__ = ["ema", "ema_xla", "ema_chunked", "pack_chunked_splits",
-           "ChunkedSplits", "ema_flops"]
+           "ChunkedSplits", "ema_flops", "pallas_supports_dtype"]
 
 # VMEM budget for the Pallas path: both child tables + out block.
 _PALLAS_VMEM_BYTES = 12 * 2 ** 20
+_PALLAS_S_BLOCK = 8
 _PALLAS_N_BLOCK = 512
+
+# Float dtypes the Pallas kernels handle without downcasting. Interpret mode
+# executes as ordinary XLA ops, so any float works; the compiled Mosaic path
+# is float32-only today (f64 is unsupported on the TPU vector unit and bf16
+# accumulation would change the counts).
+_INTERPRET_DTYPES = frozenset({np.dtype(jnp.float32), np.dtype(jnp.float64),
+                               np.dtype(jnp.bfloat16)})
+_COMPILED_DTYPES = frozenset({np.dtype(jnp.float32)})
+
+
+def pallas_supports_dtype(dtype, interpret: bool) -> bool:
+    """Whether the Pallas kernels can run this dtype *without* downcasting."""
+    dt = np.dtype(dtype)
+    return dt in (_INTERPRET_DTYPES if interpret else _COMPILED_DTYPES)
 
 
 def ema_xla(m_a: jnp.ndarray, y_p: jnp.ndarray,
@@ -39,22 +59,35 @@ def ema_xla(m_a: jnp.ndarray, y_p: jnp.ndarray,
 
 
 def ema(m_a: jnp.ndarray, y_p: jnp.ndarray, ia: jnp.ndarray, ip: jnp.ndarray,
-        *, use_pallas: bool = False, interpret: bool = True) -> jnp.ndarray:
-    if use_pallas and _fits_vmem(m_a, y_p):
-        if m_a.ndim > 2:
-            # batched colorings: one kernel launch per batch element inside a
-            # single device call (lax.map keeps the grid spec 2-D)
-            return jax.lax.map(
-                lambda xy: ema_pallas(xy[0], xy[1], ia, ip,
-                                      interpret=interpret),
-                (m_a, y_p))
-        return ema_pallas(m_a, y_p, ia, ip, interpret=interpret)
+        *, use_pallas: bool = False, interpret: bool = True,
+        s_block: int | None = None, n_block: int | None = None,
+        autotune: bool = False) -> jnp.ndarray:
+    """eMA dispatch. ``use_pallas`` selects the kernel path when the dtype is
+    supported and the tables fit VMEM at the chosen block sizes; a batched
+    (B, C, N) input runs as ONE kernel launch (batch on the grid). Explicit
+    ``s_block``/``n_block`` override the defaults; ``autotune=True`` sweeps
+    :data:`repro.kernels.autotune.EMA_BLOCK_CANDIDATES` once per shape."""
+    dtype = jnp.promote_types(m_a.dtype, y_p.dtype)
+    if use_pallas and pallas_supports_dtype(dtype, interpret):
+        if autotune and (s_block is None or n_block is None):
+            s_block, n_block = _autotune.ema_blocks(m_a, y_p, ia, ip,
+                                                    interpret=interpret)
+        sb = s_block or _PALLAS_S_BLOCK
+        nb = n_block or _PALLAS_N_BLOCK
+        if _fits_vmem(m_a, y_p, n_block=nb, s_block=sb):
+            return ema_pallas(m_a, y_p, ia, ip, s_block=sb, n_block=nb,
+                              interpret=interpret)
     return ema_xla(m_a, y_p, ia, ip)
 
 
-def _fits_vmem(m_a, y_p) -> bool:
-    resident = (m_a.shape[-2] + y_p.shape[-2]) * _PALLAS_N_BLOCK * 4
-    return resident < _PALLAS_VMEM_BYTES
+def _fits_vmem(m_a, y_p, *, n_block: int = _PALLAS_N_BLOCK,
+               s_block: int = _PALLAS_S_BLOCK) -> bool:
+    """VMEM residency check at the *actual* block sizes and itemsize: both
+    child tables (full combination axis, one n_block of lanes) plus the
+    (s_block, n_block) output block."""
+    itemsize = np.dtype(jnp.promote_types(m_a.dtype, y_p.dtype)).itemsize
+    rows = m_a.shape[-2] + y_p.shape[-2] + s_block
+    return rows * n_block * itemsize < _PALLAS_VMEM_BYTES
 
 
 # ------------------------------------------------------------------ chunked
@@ -115,22 +148,22 @@ def ema_chunked(m_a: jnp.ndarray, m_p: jnp.ndarray, pack: ChunkedSplits,
                 spmm_fn) -> jnp.ndarray:
     """eMA that never materializes the full passive SpMM output.
 
-    ``spmm_fn(chunk)`` maps a ``(chunk_rows, N)`` slice of the passive
+    ``spmm_fn(chunk)`` maps a ``(..., chunk_rows, N)`` slice of the passive
     table to its neighbor sums; the scan walks the ``C(k, t_p)`` axis one
     chunk at a time, applying that chunk's (active, passive, out) pairs in
-    ``pair_block``-sized scatter-adds. Peak extra memory is one passive
-    chunk + one pair block instead of the whole ``C(k, t_p) x N`` table.
-    Matches the unchunked path to float reassociation (~1e-6 relative).
+    ``pair_block``-sized scatter-adds. A leading (B,) batch dimension rides
+    through every step natively (gathers on axis -2, scatter-adds under an
+    ellipsis) — one scan for the whole coloring batch, no per-element
+    serialization. Peak extra memory is one passive chunk + one pair block
+    instead of the whole ``C(k, t_p) x N`` table. Matches the unchunked path
+    to float reassociation (~1e-6 relative).
     """
-    if m_a.ndim > 2:
-        # batched colorings: serialize batch elements inside the device call
-        # (chunked nodes only run when memory is the binding constraint)
-        return jax.lax.map(
-            lambda xy: ema_chunked(xy[0], xy[1], pack, spmm_fn),
-            (m_a, m_p))
     n = m_a.shape[-1]
+    lead = m_a.shape[:-2]
     from repro.kernels.spmm.ops import spmm_row_chunks
-    m_p_chunks = spmm_row_chunks(m_p, pack.n_chunks)    # (Q, R, N)
+    m_p_chunks = spmm_row_chunks(m_p, pack.n_chunks)    # (..., Q, R, N)
+    # scan iterates the chunk axis, which must lead
+    m_p_chunks = jnp.moveaxis(m_p_chunks, -3, 0)        # (Q, ..., R, N)
     pb = pack.pair_block
     n_blocks = pack.out_idx.shape[1] // pb
     oj = jnp.asarray(pack.out_idx)
@@ -140,13 +173,13 @@ def ema_chunked(m_a: jnp.ndarray, m_p: jnp.ndarray, pack: ChunkedSplits,
 
     def chunk_body(acc, xs):
         m_p_c, oj_c, ai_c, pl_c, mk_c = xs
-        y = spmm_fn(m_p_c)                              # (R, N)
+        y = spmm_fn(m_p_c)                              # (..., R, N)
 
         def pair_body(acc2, ys):
             o, a, p, w = ys
-            term = jnp.take(m_a, a, axis=0) * jnp.take(y, p, axis=0) \
+            term = jnp.take(m_a, a, axis=-2) * jnp.take(y, p, axis=-2) \
                 * w[:, None]
-            return acc2.at[o].add(term), None
+            return acc2.at[..., o, :].add(term), None
 
         acc, _ = jax.lax.scan(
             pair_body, acc,
@@ -154,7 +187,7 @@ def ema_chunked(m_a: jnp.ndarray, m_p: jnp.ndarray, pack: ChunkedSplits,
              pl_c.reshape(n_blocks, pb), mk_c.reshape(n_blocks, pb)))
         return acc, None
 
-    acc0 = jnp.zeros((pack.n_out_rows, n), m_a.dtype)
+    acc0 = jnp.zeros(lead + (pack.n_out_rows, n), m_a.dtype)
     acc, _ = jax.lax.scan(chunk_body, acc0, (m_p_chunks, oj, ai, pl, mk))
     return acc
 

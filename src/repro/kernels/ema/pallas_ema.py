@@ -1,4 +1,4 @@
-"""Pallas TPU eMA kernel (paper §4.5 Algorithm 4 line 7).
+"""Pallas eMA kernel (paper §4.5 Algorithm 4 line 7).
 
 Layout (C, N): color combinations on sublanes, vertices on lanes. The static
 split tables IA/IP select rows of the resident child tables; each step is a
@@ -6,13 +6,20 @@ vector FMA over a block of vertex lanes:
 
     out[j, v_blk] = sum_l m_a[IA[j, l], v_blk] * y_p[IP[j, l], v_blk]
 
-Grid: (s_blocks, n_blocks). The child tables keep their full combination
-dimension resident in VMEM and are blocked over vertices only — valid for
-k <= ~13 (C(13,6) * 512 lanes * 4 B ≈ 3.5 MB per table); larger templates fall
-back to the XLA path in ops.py. Row gathers are sublane-dynamic indexing,
-which Mosaic lowers to vector loads with a dynamic base — cheap relative to
-the lane-dynamic gathers the naive layout would need (that asymmetry is the
-whole point of the paper's column-major layout, transposed to TPU lanes).
+Grid: (batch, s_blocks, n_blocks) — a batched (B, C, N) coloring table is one
+kernel launch with the batch folded into the leading (parallel) grid axis.
+The child tables keep their full combination dimension resident in VMEM and
+are blocked over vertices only — valid for k <= ~13 (C(13,6) * 512 lanes *
+4 B ≈ 3.5 MB per table); larger templates fall back to the XLA path in
+ops.py. Row gathers are sublane-dynamic indexing, which Mosaic lowers to
+vector loads with a dynamic base — cheap relative to the lane-dynamic gathers
+the naive layout would need (that asymmetry is the whole point of the paper's
+column-major layout, transposed to TPU lanes).
+
+Tables of any float dtype pass through unchanged (out/accumulator dtype =
+promoted input dtype); the padded tail of the split-table axis is masked, so
+padded rows cost no FMAs and write exact zeros. Runs interpreted on CPU and
+compiled (parallel dimension semantics) on TPU.
 """
 
 from __future__ import annotations
@@ -27,20 +34,31 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = ["ema_pallas"]
 
 
-def _kernel(ia_ref, ip_ref, ma_ref, yp_ref, out_ref, *, s_block: int, l: int):
-    sb = pl.program_id(0)
-    n_blk = out_ref.shape[1]
+def _kernel(ia_ref, ip_ref, ma_ref, yp_ref, out_ref, *, s_block: int, l: int,
+            s_total: int):
+    sb = pl.program_id(1)
+    n_blk = out_ref.shape[-1]
+    dtype = out_ref.dtype
 
     def s_body(s, _):
-        def l_body(j, row):
-            ia = ia_ref[sb * s_block + s, j]
-            ip = ip_ref[sb * s_block + s, j]
-            a_row = ma_ref[pl.dslice(ia, 1), :]   # (1, N_BLK)
-            p_row = yp_ref[pl.dslice(ip, 1), :]   # (1, N_BLK)
-            return row + a_row * p_row
+        s_global = sb * s_block + s
 
-        row = jax.lax.fori_loop(0, l, l_body, jnp.zeros((1, n_blk), jnp.float32))
-        out_ref[pl.dslice(s, 1), :] = row
+        def compute_row():
+            def l_body(j, row):
+                ia = ia_ref[s_global, j]
+                ip = ip_ref[s_global, j]
+                a_row = ma_ref[0, pl.dslice(ia, 1), :]   # (1, N_BLK)
+                p_row = yp_ref[0, pl.dslice(ip, 1), :]   # (1, N_BLK)
+                return row + a_row * p_row
+
+            return jax.lax.fori_loop(0, l, l_body,
+                                     jnp.zeros((1, n_blk), dtype))
+
+        # padded split rows (s_global >= s_total) skip the FMA loop entirely
+        # and store zeros, so padding costs no work and no garbage values
+        row = jax.lax.cond(s_global < s_total, compute_row,
+                           lambda: jnp.zeros((1, n_blk), dtype))
+        out_ref[0, pl.dslice(s, 1), :] = row
         return 0
 
     jax.lax.fori_loop(0, s_block, s_body, 0)
@@ -50,8 +68,8 @@ def _kernel(ia_ref, ip_ref, ma_ref, yp_ref, out_ref, *, s_block: int, l: int):
     jax.jit, static_argnames=("s_block", "n_block", "interpret")
 )
 def ema_pallas(
-    m_a: jnp.ndarray,   # (Ca, N) f32
-    y_p: jnp.ndarray,   # (Cp, N) f32
+    m_a: jnp.ndarray,   # (Ca, N) or (B, Ca, N)
+    y_p: jnp.ndarray,   # (Cp, N) or (B, Cp, N)
     ia: jnp.ndarray,    # (S, L) int32
     ip: jnp.ndarray,    # (S, L) int32
     *,
@@ -60,34 +78,56 @@ def ema_pallas(
     interpret: bool = True,
 ) -> jnp.ndarray:
     s, l = ia.shape
-    n = m_a.shape[1]
-    assert y_p.shape[1] == n
+    batched = m_a.ndim > 2
+    if m_a.ndim != y_p.ndim:
+        raise ValueError(f"rank mismatch: {m_a.shape} vs {y_p.shape}")
+    if not batched:
+        m_a = m_a[None]
+        y_p = y_p[None]
+    if m_a.ndim != 3:
+        # collapse any extra leading dims into one batch axis
+        lead = m_a.shape[:-2]
+        out = ema_pallas(m_a.reshape((-1,) + m_a.shape[-2:]),
+                         y_p.reshape((-1,) + y_p.shape[-2:]), ia, ip,
+                         s_block=s_block, n_block=n_block,
+                         interpret=interpret)
+        return out.reshape(lead + out.shape[-2:])
+    dtype = jnp.promote_types(m_a.dtype, y_p.dtype)
+    m_a = m_a.astype(dtype)
+    y_p = y_p.astype(dtype)
+    b, _, n = m_a.shape
+    assert y_p.shape[-1] == n
     s_pad = -(-s // s_block) * s_block
     n_pad = -(-n // n_block) * n_block
     if s_pad != s:
-        # pad split tables with index 0 references; sliced away afterwards
+        # padded rows are masked inside the kernel (index 0 is a placeholder
+        # that is never dereferenced); sliced away afterwards
         ia = jnp.pad(ia, ((0, s_pad - s), (0, 0)))
         ip = jnp.pad(ip, ((0, s_pad - s), (0, 0)))
     if n_pad != n:
-        m_a = jnp.pad(m_a, ((0, 0), (0, n_pad - n)))
-        y_p = jnp.pad(y_p, ((0, 0), (0, n_pad - n)))
+        m_a = jnp.pad(m_a, ((0, 0), (0, 0), (0, n_pad - n)))
+        y_p = jnp.pad(y_p, ((0, 0), (0, 0), (0, n_pad - n)))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(s_pad // s_block, n_pad // n_block),
+        grid=(b, s_pad // s_block, n_pad // n_block),
         in_specs=[
-            pl.BlockSpec((m_a.shape[0], n_block), lambda sb, nb, IA, IP: (0, nb)),
-            pl.BlockSpec((y_p.shape[0], n_block), lambda sb, nb, IA, IP: (0, nb)),
+            pl.BlockSpec((1, m_a.shape[1], n_block),
+                         lambda bb, sb, nb, IA, IP: (bb, 0, nb)),
+            pl.BlockSpec((1, y_p.shape[1], n_block),
+                         lambda bb, sb, nb, IA, IP: (bb, 0, nb)),
         ],
-        out_specs=pl.BlockSpec((s_block, n_block), lambda sb, nb, IA, IP: (sb, nb)),
+        out_specs=pl.BlockSpec((1, s_block, n_block),
+                               lambda bb, sb, nb, IA, IP: (bb, sb, nb)),
     )
     out = pl.pallas_call(
-        functools.partial(_kernel, s_block=s_block, l=l),
+        functools.partial(_kernel, s_block=s_block, l=l, s_total=s),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((s_pad, n_pad), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((b, s_pad, n_pad), dtype),
         interpret=interpret,
         compiler_params=None if interpret else pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel"),
+            dimension_semantics=("parallel", "parallel", "parallel"),
         ),
     )(ia, ip, m_a, y_p)
-    return out[:s, :n]
+    out = out[:, :s, :n]
+    return out if batched else out[0]

@@ -1,0 +1,7 @@
+"""Fused SpMM -> eMA Pallas kernel: one plan node, one kernel, no HBM
+y-cache intermediate (paper §4.5's bandwidth argument taken to its limit)."""
+
+from repro.kernels.fused.ops import (FusedPrep, fused_fits_vmem,
+                                     fused_spmm_ema, prepare_fused)
+
+__all__ = ["FusedPrep", "fused_fits_vmem", "fused_spmm_ema", "prepare_fused"]

@@ -1,0 +1,128 @@
+"""Dispatch for the fused SpMM -> eMA kernel.
+
+``prepare_fused(graph)`` lifts the adjacency into the destination-sorted BSR
+block stream the kernel walks (plus raw edge lists for the explicit XLA
+fallback); ``fused_spmm_ema(m_a, m_p, ia, ip, prep)`` computes
+
+    out = ema(m_a, m_p @ A, ia, ip)
+
+without materializing the ``(B, C(k,t_p), N)`` neighbor-sum table in HBM —
+the whole point of the fusion (see pallas_fused.py). Unsupported dtypes or
+tables too large for VMEM run the unfused XLA pair (segment SpMM + scan eMA)
+explicitly; the kernel path never downcasts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.structure import Graph
+from repro.kernels.ema.ops import (_PALLAS_VMEM_BYTES, ema_xla,
+                                   pallas_supports_dtype)
+from repro.kernels.fused.pallas_fused import fused_spmm_ema_pallas
+
+__all__ = ["FusedPrep", "prepare_fused", "fused_spmm_ema", "fused_fits_vmem"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FusedPrep:
+    """Device-side adjacency operand for the fused kernel (a pytree)."""
+
+    n: int
+    arrays: dict[str, Any]
+    static: dict[str, Any]
+
+    def tree_flatten(self):
+        keys = sorted(self.arrays)
+        return [self.arrays[k] for k in keys], (
+            self.n, keys, tuple(sorted(self.static.items())))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        n, keys, static = aux
+        return cls(n, dict(zip(keys, children)), dict(static))
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self.arrays["blocks"].shape[0])
+
+
+def prepare_fused(g: Graph, *, tile: int = 128,
+                  interpret: bool = True) -> FusedPrep:
+    """BSR block stream (every dst tile populated, sorted by dst tile) plus
+    the raw edge lists for the XLA fallback path."""
+    gp = g.padded(tile)
+    bs = gp.bsr(tile=tile)
+    src, dst = g.edges_by_dst
+    return FusedPrep(
+        g.n,
+        {"blocks": jnp.asarray(bs.blocks),
+         "src_tile": jnp.asarray(bs.src_tile),
+         "dst_tile": jnp.asarray(bs.dst_tile),
+         "fb_src": jnp.asarray(src), "fb_dst": jnp.asarray(dst)},
+        {"tile": tile, "n_tiles": bs.n_tiles, "interpret": interpret},
+    )
+
+
+def fused_fits_vmem(c_a: int, c_p: int, s: int, *, l: int = 0,
+                    tile: int = 128, dtype=jnp.float32) -> bool:
+    """VMEM residency of one fused grid step: active block + passive block +
+    y scratch + adjacency block + the (padded) output block + the resident
+    one-hot split-selection matrices (``l`` splits)."""
+    itemsize = np.dtype(dtype).itemsize
+    s_pad = -(-s // 8) * 8
+    rows = c_a + 2 * c_p + tile + s_pad
+    sel = l * s_pad * (c_a + c_p)
+    return (rows * tile + sel) * itemsize < _PALLAS_VMEM_BYTES
+
+
+def _fallback(m_a, m_p, ia, ip, prep: FusedPrep) -> jnp.ndarray:
+    """Unfused XLA pair — the explicit escape hatch for unsupported dtypes
+    or VMEM-oversized tables (matches the kernel to float reassociation)."""
+    from repro.kernels.spmm.ops import _spmm_segment
+    lead = m_p.shape[:-2]
+    flat = m_p.reshape((-1, m_p.shape[-1]))
+    y = _spmm_segment(flat, prep.arrays["fb_src"], prep.arrays["fb_dst"],
+                      prep.n)
+    y = y.reshape(lead + (m_p.shape[-2], m_p.shape[-1]))
+    return ema_xla(m_a, y, ia, ip)
+
+
+def fused_spmm_ema(m_a: jnp.ndarray, m_p: jnp.ndarray,
+                   ia: jnp.ndarray, ip: jnp.ndarray,
+                   prep: FusedPrep) -> jnp.ndarray:
+    """``ema(m_a, m_p @ A, ia, ip)`` for tables of shape (..., C, N).
+
+    Rank-polymorphic over one optional leading batch dimension (folded into
+    the kernel grid — one launch for the whole coloring batch). The vertex
+    axis is padded to the tile multiple on the way in (padding vertices are
+    isolated, so their neighbor sums and output columns are exact zeros) and
+    sliced on the way out.
+    """
+    st = prep.static
+    dtype = jnp.promote_types(m_a.dtype, m_p.dtype)
+    if not pallas_supports_dtype(dtype, st["interpret"]) \
+            or not fused_fits_vmem(m_a.shape[-2], m_p.shape[-2], ia.shape[0],
+                                   l=ia.shape[1], tile=st["tile"],
+                                   dtype=dtype):
+        return _fallback(m_a, m_p, ia, ip, prep)
+    batched = m_a.ndim > 2
+    lead = m_a.shape[:-2]
+    n = m_a.shape[-1]
+    m_a3 = m_a.reshape((-1,) + m_a.shape[-2:])
+    m_p3 = m_p.reshape((-1,) + m_p.shape[-2:])
+    n_pad = st["n_tiles"] * st["tile"]
+    if n_pad != n:
+        m_a3 = jnp.pad(m_a3, ((0, 0), (0, 0), (0, n_pad - n)))
+        m_p3 = jnp.pad(m_p3, ((0, 0), (0, 0), (0, n_pad - n)))
+    out = fused_spmm_ema_pallas(
+        m_a3, m_p3, ia, ip, prep.arrays["blocks"], prep.arrays["src_tile"],
+        prep.arrays["dst_tile"], n_tiles=st["n_tiles"], tile=st["tile"],
+        interpret=st["interpret"])[:, :, :n]
+    return out.reshape(lead + out.shape[-2:]) if batched else out[0]

@@ -1,0 +1,195 @@
+"""Fused SpMM -> eMA Pallas kernel (paper Algorithm 4 lines 3+7, one pass).
+
+The unfused PGBSC walk materializes each plan node's passive neighbor-sum
+table ``y_p = m_p @ A`` (shape ``(B, C(k,t_p), N)``) in HBM, then reads it
+back for the eMA. This kernel keeps the whole exchange in VMEM: the grid
+walks the destination-tile-sorted BSR block stream of the adjacency, and for
+each destination vertex tile
+
+    1. accumulates ``y[:, :, tile] += m_p[:, :, src_tile] @ block`` into a
+       VMEM scratch accumulator (MXU matmuls over the tile's block run),
+    2. on the tile's last block, applies the (IA, IP) split combination —
+       expressed as one-hot selection matmuls per split, the MXU-friendly
+       form of the row gathers — against the resident active table block and
+       writes ONLY the ``(bb, C(k,t), tile)`` output block; y never exists
+       outside VMEM.
+
+Grid: (batch_blocks, n_blocks). The coloring batch is tiled into blocks of
+``bb`` colorings that ride INSIDE the kernel block shapes (largest ``bb``
+whose working set fits VMEM) rather than as bare grid steps — per-step
+overhead is paid once per ``bb`` colorings, and the MXU matmuls see
+``bb``-fold taller operands. The batch-block axis is parallel; the BSR block
+axis is "arbitrary" (the scratch accumulator and output block carry state
+across consecutive steps of one destination tile). ``Graph.bsr()``
+guarantees every destination tile has at least one block (zero blocks are
+inserted for empty tiles), so every output block is written. Padded output
+rows (combination axis rounded up to the sublane multiple) select nothing
+and come out exact zeros; padded batch rows see zero tables.
+
+Correct under interpret mode on CPU; ``dimension_semantics`` set for the
+compiled TPU path (the batched ``dot_general`` contractions need a Mosaic
+with batched-dot support). All dtypes the dispatch layer admits (see
+``ema.ops.pallas_supports_dtype``) flow through out_shape, the scratch
+accumulator, and both matmul accumulations.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["fused_spmm_ema_pallas", "pick_batch_block"]
+
+# conservative per-core VMEM working-set budget (matches ema.ops)
+_VMEM_BUDGET = 12 * 1024 * 1024
+
+
+def pick_batch_block(b: int, c_a: int, c_p: int, s_pad: int, l: int,
+                     tile: int, itemsize: int) -> int:
+    """Largest batch block whose fused working set fits the VMEM budget.
+
+    Per grid step the kernel holds ``bb`` copies of the active block, the
+    passive block, the y scratch, and the output block, plus one adjacency
+    tile and the (batch-free) selection matrices.
+    """
+    def fits(bb: int) -> bool:
+        per_b = (c_a + 2 * c_p + s_pad) * tile
+        fixed = tile * tile + l * s_pad * (c_a + c_p)
+        return (bb * per_b + fixed) * itemsize < _VMEM_BUDGET
+
+    bb = max(1, b)
+    while bb > 1 and not fits(bb):
+        bb = -(-bb // 2)
+    return bb
+
+
+def _kernel(dst_tile_ref, src_tile_ref,                   # scalar prefetch
+            blocks_ref, ma_ref, mp_ref, sela_ref, selp_ref,  # inputs
+            out_ref,                                      # output
+            y_ref,                                        # VMEM scratch
+            *, l: int):
+    b = pl.program_id(1)
+    nb = pl.num_programs(1)
+    dtype = out_ref.dtype
+
+    # --- SpMM leg: accumulate this destination tile's neighbor sums in VMEM
+    is_first = jnp.logical_or(
+        b == 0, dst_tile_ref[b] != dst_tile_ref[jnp.maximum(b - 1, 0)]
+    )
+
+    @pl.when(is_first)
+    def _zero():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    # (bb, Cp, tile) @ (tile, tile): fold the batch block into matmul rows
+    bb, c_p, tile = y_ref.shape
+    mp_flat = mp_ref[...].reshape(bb * c_p, tile)
+    y_ref[...] += jax.lax.dot(
+        mp_flat, blocks_ref[0].astype(dtype), preferred_element_type=dtype
+    ).reshape(bb, c_p, tile)
+
+    # --- eMA leg: on the tile's last block, combine and write the output.
+    # The (IA, IP) row gathers are expressed as one-hot selection matmuls
+    # (MXU-friendly; TPU Pallas has no dynamic sublane gather): per split i,
+    #   out[b] += (sel_a[i] @ m_a[b]) * (sel_p[i] @ y[b]).
+    # Padded output rows have all-zero selection rows, so they come out
+    # exact zeros without a separate masking pass.
+    is_last = jnp.logical_or(
+        b == nb - 1, dst_tile_ref[b] != dst_tile_ref[jnp.minimum(b + 1, nb - 1)]
+    )
+
+    @pl.when(is_last)
+    def _combine():
+        s_pad = out_ref.shape[1]
+        contract = (((1,), (1,)), ((), ()))   # sel (S,C) x table (bb,C,tile)
+
+        def body(i, acc):
+            sel_a = sela_ref[pl.dslice(i, 1)][0]          # (S_pad, Ca)
+            sel_p = selp_ref[pl.dslice(i, 1)][0]          # (S_pad, Cp)
+            a_rows = jax.lax.dot_general(
+                sel_a, ma_ref[...], contract, preferred_element_type=dtype)
+            p_rows = jax.lax.dot_general(
+                sel_p, y_ref[...], contract, preferred_element_type=dtype)
+            return acc + a_rows * p_rows                  # (S_pad, bb, tile)
+
+        acc = jax.lax.fori_loop(
+            0, l, body, jnp.zeros((s_pad, bb, tile), dtype))
+        out_ref[...] = acc.transpose(1, 0, 2)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_tiles", "tile", "interpret")
+)
+def fused_spmm_ema_pallas(
+    m_a: jnp.ndarray,        # (B, Ca, N) float, N = n_tiles * tile
+    m_p: jnp.ndarray,        # (B, Cp, N) float
+    ia: jnp.ndarray,         # (S, L) int32
+    ip: jnp.ndarray,         # (S, L) int32
+    blocks: jnp.ndarray,     # (n_blocks, tile, tile) {0,1} adjacency tiles
+    src_tile: jnp.ndarray,   # (n_blocks,) int32
+    dst_tile: jnp.ndarray,   # (n_blocks,) int32, sorted ascending, all tiles
+    *,
+    n_tiles: int,
+    tile: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """-> (B, S, N): ``ema(m_a, m_p @ A, ia, ip)`` without materializing
+    the ``(B, Cp, N)`` neighbor-sum table. Inputs must be 3-D (batched);
+    the ops-layer wrapper handles rank/padding/dtype dispatch."""
+    s, l = ia.shape
+    b, _, n = m_a.shape
+    assert n == n_tiles * tile, (n, n_tiles, tile)
+    assert m_p.shape[0] == b and m_p.shape[2] == n
+    dtype = jnp.promote_types(m_a.dtype, m_p.dtype)
+    m_a = m_a.astype(dtype)
+    m_p = m_p.astype(dtype)
+    c_a, c_p = m_a.shape[1], m_p.shape[1]
+    s_pad = -(-s // 8) * 8          # sublane multiple for the output block
+    bb = pick_batch_block(b, c_a, c_p, s_pad, l, tile, dtype.itemsize)
+    b_pad = -(-b // bb) * bb
+    if b_pad != b:
+        m_a = jnp.pad(m_a, ((0, b_pad - b), (0, 0), (0, 0)))
+        m_p = jnp.pad(m_p, ((0, b_pad - b), (0, 0), (0, 0)))
+    # one-hot selection matrices per split: sel[i, j, c] = 1 iff split i of
+    # output row j reads table row c. Padded rows (>= s) select nothing.
+    sel_a = (ia.T[:, :, None] == jnp.arange(c_a)).astype(dtype)  # (L, S, Ca)
+    sel_p = (ip.T[:, :, None] == jnp.arange(c_p)).astype(dtype)  # (L, S, Cp)
+    if s_pad != s:
+        pad = ((0, 0), (0, s_pad - s), (0, 0))
+        sel_a = jnp.pad(sel_a, pad)
+        sel_p = jnp.pad(sel_p, pad)
+    n_blocks = blocks.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b_pad // bb, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, tile, tile),
+                         lambda g, blk, dt, st: (blk, 0, 0)),
+            pl.BlockSpec((bb, c_a, tile),
+                         lambda g, blk, dt, st: (g, 0, dt[blk])),
+            pl.BlockSpec((bb, c_p, tile),
+                         lambda g, blk, dt, st: (g, 0, st[blk])),
+            pl.BlockSpec((l, s_pad, c_a),
+                         lambda g, blk, dt, st: (0, 0, 0)),
+            pl.BlockSpec((l, s_pad, c_p),
+                         lambda g, blk, dt, st: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, s_pad, tile),
+                               lambda g, blk, dt, st: (g, 0, dt[blk])),
+        scratch_shapes=[pltpu.VMEM((bb, c_p, tile), dtype)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, l=l),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b_pad, s_pad, n), dtype),
+        interpret=interpret,
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+    )(dst_tile, src_tile, blocks, m_a, m_p, sel_a, sel_p)
+    return out[:b, :s, :]

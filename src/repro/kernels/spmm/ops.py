@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.graph.structure import Graph
+from repro.kernels import autotune as _autotune
+from repro.kernels.ema import ops as ema_ops
 from repro.kernels.spmm.pallas_bsr import spmm_bsr_pallas
 from repro.kernels.spmm.pallas_gather import spmm_gather_pallas
 
@@ -68,6 +70,11 @@ def prepare(g: Graph, method: str = "segment", *, tile: int = 128,
                         {"nbr": jnp.asarray(nbr), "mask": jnp.asarray(mask)}, {})
     if method == "dense":
         return SpmmPrep(method, g.n, {"a": jnp.asarray(g.to_dense())}, {})
+    # Pallas backends also carry the raw edge lists so a dtype the kernel
+    # does not support can fall back to the XLA segment path explicitly
+    # (never a silent downcast).
+    fb_src, fb_dst = g.edges_by_dst
+    fb = {"fb_src": jnp.asarray(fb_src), "fb_dst": jnp.asarray(fb_dst)}
     if method == "pallas_gather":
         gp = g.padded(tile)
         ch = gp.edge_chunks(tile=tile, chunk_size=chunk_size)
@@ -75,7 +82,7 @@ def prepare(g: Graph, method: str = "segment", *, tile: int = 128,
             method, g.n,
             {"src": jnp.asarray(ch.src), "dst_local": jnp.asarray(ch.dst_local),
              "mask": jnp.asarray(ch.mask), "src_tile": jnp.asarray(ch.src_tile),
-             "dst_tile": jnp.asarray(ch.dst_tile)},
+             "dst_tile": jnp.asarray(ch.dst_tile), **fb},
             {"tile": tile, "n_tiles": ch.n_tiles, "interpret": interpret},
         )
     # pallas_bsr
@@ -84,7 +91,7 @@ def prepare(g: Graph, method: str = "segment", *, tile: int = 128,
     return SpmmPrep(
         method, g.n,
         {"blocks": jnp.asarray(bs.blocks), "src_tile": jnp.asarray(bs.src_tile),
-         "dst_tile": jnp.asarray(bs.dst_tile)},
+         "dst_tile": jnp.asarray(bs.dst_tile), **fb},
         {"tile": tile, "n_tiles": bs.n_tiles, "interpret": interpret},
     )
 
@@ -118,16 +125,22 @@ def _spmm_ell(m: jnp.ndarray, nbr, mask) -> jnp.ndarray:
     return acc
 
 
-def spmm(m: jnp.ndarray, prep: SpmmPrep) -> jnp.ndarray:
+def spmm(m: jnp.ndarray, prep: SpmmPrep, *, c_block: int | None = None,
+         autotune: bool = False) -> jnp.ndarray:
     """Y = M @ A for count table m of shape (..., C, N).
 
     Leading (batch) dimensions are folded into the combination rows: every
     backend treats rows independently, so a (B, C, N) batched table is one
     (B*C, N) SpMM — a single kernel launch for the whole coloring batch.
+    A dtype the Pallas kernels do not support in the current mode runs the
+    XLA segment path on the prep's fallback edge lists instead (explicit
+    fallback, never a downcast). ``c_block`` overrides the Pallas row-block
+    heuristic; ``autotune=True`` sweeps candidates once per (shape, dtype).
     """
     if m.ndim > 2:
         lead = m.shape[:-1]
-        out = spmm(m.reshape(-1, m.shape[-1]), prep)
+        out = spmm(m.reshape(-1, m.shape[-1]), prep, c_block=c_block,
+                   autotune=autotune)
         return out.reshape(lead + (out.shape[-1],))
     a = prep.arrays
     if prep.method == "segment":
@@ -135,23 +148,33 @@ def spmm(m: jnp.ndarray, prep: SpmmPrep) -> jnp.ndarray:
     if prep.method == "ell":
         return _spmm_ell(m, a["nbr"], a["mask"])
     if prep.method == "dense":
-        return m @ a["a"]
+        return m @ a["a"].astype(m.dtype)
     st = prep.static
+    if not ema_ops.pallas_supports_dtype(m.dtype, st["interpret"]):
+        return _spmm_segment(m, a["fb_src"], a["fb_dst"], prep.n)
     n_pad = st["n_tiles"] * st["tile"]
     m_pad = jnp.pad(m, ((0, 0), (0, n_pad - m.shape[1]))) if n_pad != m.shape[1] else m
-    if prep.method == "pallas_gather":
-        out = spmm_gather_pallas(
-            m_pad, a["src"], a["dst_local"], a["mask"], a["src_tile"],
-            a["dst_tile"], n_tiles=st["n_tiles"], tile=st["tile"],
-            c_block=_pick_c_block(m.shape[0]), interpret=st["interpret"],
-        )
-    else:
-        out = spmm_bsr_pallas(
+
+    def run(cb: int) -> jnp.ndarray:
+        if prep.method == "pallas_gather":
+            return spmm_gather_pallas(
+                m_pad, a["src"], a["dst_local"], a["mask"], a["src_tile"],
+                a["dst_tile"], n_tiles=st["n_tiles"], tile=st["tile"],
+                c_block=cb, interpret=st["interpret"],
+            )
+        return spmm_bsr_pallas(
             m_pad, a["blocks"], a["src_tile"], a["dst_tile"],
             n_tiles=st["n_tiles"], tile=st["tile"],
-            c_block=_pick_c_block(m.shape[0]), interpret=st["interpret"],
+            c_block=cb, interpret=st["interpret"],
         )
-    return out[:, : m.shape[1]]
+
+    if c_block is None:
+        if autotune:
+            c_block = _autotune.spmm_c_block(
+                m_pad, run, kind=prep.method, interpret=st["interpret"])
+        else:
+            c_block = _pick_c_block(m.shape[0])
+    return run(c_block)[:, : m.shape[1]]
 
 
 def spmm_row_chunks(m: jnp.ndarray, n_chunks: int) -> jnp.ndarray:

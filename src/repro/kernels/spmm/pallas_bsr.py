@@ -36,7 +36,7 @@ def _kernel(src_tile_ref, dst_tile_ref, blocks_ref, m_ref, out_ref):
         out_ref[...] = jnp.zeros_like(out_ref)
 
     out_ref[...] += jax.lax.dot(
-        m_ref[...], blocks_ref[0], preferred_element_type=jnp.float32
+        m_ref[...], blocks_ref[0], preferred_element_type=out_ref.dtype
     )
 
 
@@ -44,8 +44,8 @@ def _kernel(src_tile_ref, dst_tile_ref, blocks_ref, m_ref, out_ref):
     jax.jit, static_argnames=("n_tiles", "tile", "c_block", "interpret")
 )
 def spmm_bsr_pallas(
-    m: jnp.ndarray,          # (C, N) f32, N = n_tiles * tile
-    blocks: jnp.ndarray,     # (n_blocks, tile, tile) f32
+    m: jnp.ndarray,          # (C, N) float, N = n_tiles * tile
+    blocks: jnp.ndarray,     # (n_blocks, tile, tile) {0,1}, cast to m's dtype
     src_tile: jnp.ndarray,   # (n_blocks,) int32
     dst_tile: jnp.ndarray,   # (n_blocks,) int32, sorted ascending
     *,
@@ -56,6 +56,8 @@ def spmm_bsr_pallas(
 ) -> jnp.ndarray:
     c, n = m.shape
     assert n == n_tiles * tile, (n, n_tiles, tile)
+    dtype = m.dtype
+    blocks = blocks.astype(dtype)
     c_pad = -(-c // c_block) * c_block
     if c_pad != c:
         m = jnp.pad(m, ((0, c_pad - c), (0, 0)))
@@ -73,7 +75,7 @@ def spmm_bsr_pallas(
     out = pl.pallas_call(
         _kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((c_pad, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((c_pad, n), dtype),
         interpret=interpret,
         compiler_params=None if interpret else pltpu.CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary"),

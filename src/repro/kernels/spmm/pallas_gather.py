@@ -38,6 +38,7 @@ def _kernel(src_tile_ref, dst_tile_ref,        # scalar prefetch (SMEM)
             out_ref):                           # output
     t = pl.program_id(1)
     tile = out_ref.shape[1]
+    dtype = out_ref.dtype
 
     # Zero the accumulator on the first chunk of each destination tile.
     is_first = jnp.logical_or(
@@ -50,19 +51,20 @@ def _kernel(src_tile_ref, dst_tile_ref,        # scalar prefetch (SMEM)
 
     src = src_ref[0, :]            # (E,) global src ids of this chunk
     dstl = dstl_ref[0, :]          # (E,) local dst offsets
-    mask = mask_ref[0, :]          # (E,) {0,1}
+    mask = mask_ref[0, :]          # (E,) {0,1} in the table dtype
 
     src_local = src - src_tile_ref[t] * tile
     lane = jax.lax.broadcasted_iota(jnp.int32, (tile, src.shape[0]), 0)
-    onehot_src = jnp.where(lane == src_local[None, :], mask[None, :], 0.0)
-    onehot_dst = (lane == dstl[None, :]).astype(jnp.float32)
+    onehot_src = jnp.where(lane == src_local[None, :], mask[None, :],
+                           jnp.zeros((), dtype))
+    onehot_dst = (lane == dstl[None, :]).astype(dtype)
     p = jax.lax.dot_general(
         onehot_src, onehot_dst,
         (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32,
+        preferred_element_type=dtype,
     )                               # (T, T) densified adjacency block
     out_ref[...] += jax.lax.dot(
-        m_ref[...], p, preferred_element_type=jnp.float32
+        m_ref[...], p, preferred_element_type=dtype
     )
 
 
@@ -71,10 +73,10 @@ def _kernel(src_tile_ref, dst_tile_ref,        # scalar prefetch (SMEM)
     static_argnames=("n_tiles", "tile", "c_block", "interpret"),
 )
 def spmm_gather_pallas(
-    m: jnp.ndarray,            # (C, N) f32, N = n_tiles * tile
+    m: jnp.ndarray,            # (C, N) float, N = n_tiles * tile
     src: jnp.ndarray,          # (n_chunks, E) int32 global src ids
     dst_local: jnp.ndarray,    # (n_chunks, E) int32
-    mask: jnp.ndarray,         # (n_chunks, E) f32
+    mask: jnp.ndarray,         # (n_chunks, E) {0,1}, cast to m's dtype
     src_tile: jnp.ndarray,     # (n_chunks,) int32
     dst_tile: jnp.ndarray,     # (n_chunks,) int32  (sorted ascending)
     *,
@@ -85,6 +87,8 @@ def spmm_gather_pallas(
 ) -> jnp.ndarray:
     c, n = m.shape
     assert n == n_tiles * tile, (n, n_tiles, tile)
+    dtype = m.dtype
+    mask = mask.astype(dtype)
     c_pad = -(-c // c_block) * c_block
     if c_pad != c:
         m = jnp.pad(m, ((0, c_pad - c), (0, 0)))
@@ -104,7 +108,7 @@ def spmm_gather_pallas(
     out = pl.pallas_call(
         _kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((c_pad, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((c_pad, n), dtype),
         interpret=interpret,
         compiler_params=None if interpret else pltpu.CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary"),

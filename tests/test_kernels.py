@@ -80,6 +80,15 @@ class TestSpmmPallas:
         want = spmm_dense(m, jnp.asarray(gp.to_dense()))
         np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0)
 
+    @pytest.mark.parametrize("method", ["pallas_gather", "pallas_bsr"])
+    def test_c_smaller_than_c_block(self, method):
+        g = GRAPHS["er_small"]()
+        rng = np.random.default_rng(11)
+        m = _rand_table(rng, 3, g.n)
+        got = spmm_ops.spmm(m, spmm_ops.prepare(g, method), c_block=64)
+        want = spmm_dense(m, jnp.asarray(g.to_dense()))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0)
+
     def test_bsr_after_rcm_has_fewer_blocks(self):
         g = grid_2d(32, 32)
         base = g.bsr(tile=128)
@@ -132,7 +141,6 @@ class TestEma:
     def test_dispatch_fallback(self):
         # huge tables skip the pallas path but remain correct
         from repro.core.colorsets import split_tables
-        from math import comb
         ia, ip = split_tables(5, 3, 1)
         rng = np.random.default_rng(3)
         m_a = _rand_table(rng, 5, 64)
@@ -140,3 +148,132 @@ class TestEma:
         want = ema_ref(m_a, y_p, jnp.asarray(ia), jnp.asarray(ip))
         got = ema(m_a, y_p, jnp.asarray(ia), jnp.asarray(ip), use_pallas=True)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0)
+
+
+def _split_pair(k, t, ta):
+    from repro.core.colorsets import split_tables
+    ia, ip = split_tables(k, t, ta)
+    return jnp.asarray(ia), jnp.asarray(ip)
+
+
+class TestBatchedKernels:
+    """The Pallas kernels fold leading batch dims into the grid — no
+    ``lax.map`` loop over colorings."""
+
+    @pytest.mark.parametrize("b", [1, 3])
+    @pytest.mark.parametrize("n", [130, 300])
+    def test_ema_pallas_batched(self, b, n):
+        from math import comb
+        ia, ip = _split_pair(7, 4, 2)
+        rng = np.random.default_rng(b * 10 + n)
+        m_a = jnp.asarray(
+            rng.integers(0, 4, size=(b, comb(7, 2), n)).astype(np.float32))
+        y_p = jnp.asarray(
+            rng.integers(0, 4, size=(b, comb(7, 2), n)).astype(np.float32))
+        got = ema_pallas(m_a, y_p, ia, ip, s_block=8, n_block=256)
+        assert got.shape == (b, comb(7, 4), n)
+        for i in range(b):
+            want = ema_ref(m_a[i], y_p[i], ia, ip)
+            np.testing.assert_allclose(np.asarray(got[i]),
+                                       np.asarray(want), rtol=0)
+
+    def test_ema_dispatch_batched(self):
+        ia, ip = _split_pair(5, 3, 1)
+        rng = np.random.default_rng(4)
+        m_a = jnp.asarray(
+            rng.integers(0, 4, size=(2, 5, 200)).astype(np.float32))
+        y_p = jnp.asarray(
+            rng.integers(0, 4, size=(2, 10, 200)).astype(np.float32))
+        got = ema(m_a, y_p, ia, ip, use_pallas=True)
+        for i in range(2):
+            want = ema_ref(m_a[i], y_p[i], ia, ip)
+            np.testing.assert_allclose(np.asarray(got[i]),
+                                       np.asarray(want), rtol=0)
+
+    def test_ema_chunked_batched(self):
+        from math import comb
+        from repro.kernels.ema.ops import ema_chunked, pack_chunked_splits
+        from repro.kernels.spmm.ref import spmm_dense
+        g = GRAPHS["er_uneven"]()
+        ia, ip = _split_pair(5, 3, 2)
+        pack = pack_chunked_splits(np.asarray(ia), np.asarray(ip),
+                                   comb(5, 1), 2)
+        rng = np.random.default_rng(5)
+        m_a = jnp.asarray(
+            rng.integers(0, 4, size=(3, comb(5, 2), g.n)).astype(np.float32))
+        m_p = jnp.asarray(
+            rng.integers(0, 4, size=(3, comb(5, 1), g.n)).astype(np.float32))
+        adj = jnp.asarray(g.to_dense())
+        got = ema_chunked(m_a, m_p, pack, lambda m: spmm_dense(m, adj))
+        for i in range(3):
+            want = ema_ref(m_a[i], spmm_dense(m_p[i], adj), ia, ip)
+            np.testing.assert_allclose(np.asarray(got[i]),
+                                       np.asarray(want), rtol=0)
+
+
+class TestKernelDtypes:
+    """dtype is threaded through out_shape, accumulators, and casts —
+    unsupported dtypes take the XLA path explicitly, never a silent
+    float32 downcast."""
+
+    def test_ema_pallas_float64(self, x64):
+        ia, ip = _split_pair(5, 3, 2)
+        rng = np.random.default_rng(1)
+        m_a = jnp.asarray(
+            rng.integers(0, 4, size=(10, 200)).astype(np.float64))
+        y_p = jnp.asarray(
+            rng.integers(0, 4, size=(5, 200)).astype(np.float64))
+        got = ema_pallas(m_a, y_p, ia, ip, s_block=8, n_block=256)
+        assert got.dtype == jnp.float64
+        want = ema_ref(m_a, y_p, ia, ip)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0)
+
+    @pytest.mark.parametrize("method", ["pallas_gather", "pallas_bsr"])
+    def test_spmm_pallas_float64(self, x64, method):
+        g = GRAPHS["er_uneven"]()
+        rng = np.random.default_rng(2)
+        m = jnp.asarray(rng.integers(0, 4, size=(9, g.n)).astype(np.float64))
+        prep = spmm_ops.prepare(g, method)
+        got = spmm_ops.spmm(m, prep)
+        assert got.dtype == jnp.float64
+        want = spmm_dense(m, jnp.asarray(g.to_dense()).astype(jnp.float64))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0)
+
+    @pytest.mark.parametrize("method", ["pallas_gather", "pallas_bsr"])
+    def test_spmm_unsupported_dtype_falls_back(self, method):
+        # float16 is outside the interpret dtype set: dispatch must use the
+        # segment-sum fallback and preserve the dtype
+        g = GRAPHS["er_small"]()
+        rng = np.random.default_rng(3)
+        m = jnp.asarray(rng.integers(0, 4, size=(5, g.n)).astype(np.float16))
+        got = spmm_ops.spmm(m, spmm_ops.prepare(g, method))
+        assert got.dtype == jnp.float16
+        want = spmm_dense(m.astype(jnp.float32), jnp.asarray(g.to_dense()))
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want), rtol=1e-3)
+
+    def test_pallas_supports_dtype_sets(self):
+        from repro.kernels.ema.ops import pallas_supports_dtype
+        assert pallas_supports_dtype(jnp.float32, True)
+        assert pallas_supports_dtype(jnp.float64, True)
+        assert pallas_supports_dtype(jnp.bfloat16, True)
+        assert not pallas_supports_dtype(jnp.float16, True)
+        # the compiled TPU path is f32-only until widened deliberately
+        assert pallas_supports_dtype(jnp.float32, False)
+        assert not pallas_supports_dtype(jnp.float64, False)
+
+    def test_engine_f64_pallas_matches_xla(self, x64):
+        # the headline regression: a dtype=float64 engine on the Pallas
+        # kernel paths must agree with the XLA path at f64 — before the
+        # fix the kernels silently downcast to f32
+        from repro.core import build_engine
+        from repro.graph.coloring import coloring_numpy
+        g = GRAPHS["er_small"]()
+        colors = coloring_numpy(0, 0, g.n, 5)
+        xla = build_engine(g, "u5", "pgbsc", dtype=jnp.float64)
+        pal = build_engine(g, "u5", "pgbsc", dtype=jnp.float64,
+                           spmm_method="pallas_bsr", use_pallas_ema=True)
+        want, _ = xla.count_colorful(colors)
+        got, _ = pal.count_colorful(colors)
+        assert want.dtype == got.dtype == jnp.float64
+        assert float(got) == float(want)

@@ -1,0 +1,272 @@
+"""Fused SpMM->eMA kernel: oracle equivalence, fallbacks, memory model.
+
+The fused kernel must be indistinguishable (to float reassociation) from the
+unfused pair ``ema(m_a, spmm(m_p), ia, ip)`` at the kernel level, and a
+``fuse_spmm_ema=True`` engine must reproduce the unfused engine's counts on
+u5/u7/u10 for single and batched colorings. The executor's peak-memory model
+must charge fused nodes no y-table, so the same budget admits at least as
+large a coloring batch.
+"""
+
+from math import comb
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_engine, executor as pexec, get_template
+from repro.core.colorsets import split_tables
+from repro.graph import Graph, erdos_renyi, grid_2d, rmat, star
+from repro.graph.coloring import coloring_numpy
+from repro.kernels import autotune
+from repro.kernels.ema.ops import ema_xla
+from repro.kernels.fused import (fused_fits_vmem, fused_spmm_ema,
+                                 prepare_fused)
+from repro.kernels.fused.pallas_fused import pick_batch_block
+from repro.kernels.spmm.ref import spmm_dense
+
+
+def _rand_table(rng, shape, dtype=np.float32):
+    return jnp.asarray(rng.integers(0, 4, size=shape).astype(dtype))
+
+
+def _oracle(g, m_a, m_p, ia, ip):
+    y = spmm_dense(m_p, jnp.asarray(g.to_dense()).astype(m_p.dtype))
+    return ema_xla(m_a, y, ia, ip)
+
+
+GRAPHS = {
+    "er_uneven": lambda: erdos_renyi(130, 7.0, seed=1),   # n % 128 != 0
+    "grid": lambda: grid_2d(12, 11),
+    "star_skew": lambda: star(150),
+    "rmat": lambda: rmat(8, 8, seed=2),
+    "empty": lambda: Graph.from_edges(100, np.zeros((0, 2), np.int64)),
+}
+
+
+class TestFusedKernel:
+    @pytest.mark.parametrize("gname", sorted(GRAPHS))
+    @pytest.mark.parametrize("k,t,ta", [(5, 3, 1), (7, 4, 2)])
+    def test_matches_oracle(self, gname, k, t, ta):
+        g = GRAPHS[gname]()
+        ia, ip = split_tables(k, t, ta)
+        ia, ip = jnp.asarray(ia), jnp.asarray(ip)
+        rng = np.random.default_rng(k * 10 + ta)
+        m_a = _rand_table(rng, (comb(k, ta), g.n))
+        m_p = _rand_table(rng, (comb(k, t - ta), g.n))
+        prep = prepare_fused(g)
+        got = fused_spmm_ema(m_a, m_p, ia, ip, prep)
+        want = _oracle(g, m_a, m_p, ia, ip)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6)
+
+    def test_empty_graph_is_zero(self):
+        g = GRAPHS["empty"]()
+        ia, ip = split_tables(5, 3, 1)
+        rng = np.random.default_rng(0)
+        m_a = _rand_table(rng, (5, g.n))
+        m_p = _rand_table(rng, (10, g.n))
+        got = fused_spmm_ema(m_a, m_p, jnp.asarray(ia), jnp.asarray(ip),
+                             prepare_fused(g))
+        assert not np.asarray(got).any()
+
+    @pytest.mark.parametrize("b", [1, 3, 5])  # 5 exercises batch padding
+    def test_batched(self, b):
+        g = GRAPHS["er_uneven"]()
+        ia, ip = split_tables(7, 4, 2)
+        ia, ip = jnp.asarray(ia), jnp.asarray(ip)
+        rng = np.random.default_rng(b)
+        m_a = _rand_table(rng, (b, comb(7, 2), g.n))
+        m_p = _rand_table(rng, (b, comb(7, 2), g.n))
+        prep = prepare_fused(g)
+        got = fused_spmm_ema(m_a, m_p, ia, ip, prep)
+        assert got.shape == (b, comb(7, 4), g.n)
+        for i in range(b):
+            want = _oracle(g, m_a[i], m_p[i], ia, ip)
+            np.testing.assert_allclose(np.asarray(got[i]),
+                                       np.asarray(want), rtol=1e-6)
+
+    def test_batch_blocking_smaller_than_batch(self, monkeypatch):
+        # force bb < B so the grid walks multiple batch blocks
+        from repro.kernels.fused import pallas_fused
+        monkeypatch.setattr(pallas_fused, "_VMEM_BUDGET", 1 << 16)
+        g = GRAPHS["rmat"]()
+        ia, ip = split_tables(5, 3, 1)
+        ia, ip = jnp.asarray(ia), jnp.asarray(ip)
+        rng = np.random.default_rng(9)
+        m_a = _rand_table(rng, (4, 5, g.n))
+        m_p = _rand_table(rng, (4, 10, g.n))
+        assert pick_batch_block(4, 5, 10, 16, ia.shape[1], 128, 4) < 4
+        got = fused_spmm_ema(m_a, m_p, ia, ip, prepare_fused(g))
+        for i in range(4):
+            want = _oracle(g, m_a[i], m_p[i], ia, ip)
+            np.testing.assert_allclose(np.asarray(got[i]),
+                                       np.asarray(want), rtol=1e-6)
+
+    def test_float64(self, x64):
+        g = GRAPHS["grid"]()
+        ia, ip = split_tables(5, 3, 2)
+        ia, ip = jnp.asarray(ia), jnp.asarray(ip)
+        rng = np.random.default_rng(5)
+        m_a = _rand_table(rng, (comb(5, 2), g.n), np.float64)
+        m_p = _rand_table(rng, (comb(5, 1), g.n), np.float64)
+        got = fused_spmm_ema(m_a, m_p, ia, ip, prepare_fused(g))
+        assert got.dtype == jnp.float64
+        want = _oracle(g, m_a, m_p, ia, ip)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0)
+
+    def test_unsupported_dtype_falls_back_exactly(self):
+        # float16 is outside the kernel's dtype set -> explicit XLA fallback,
+        # never a silent cast; small ints are exact in f16
+        g = GRAPHS["rmat"]()
+        ia, ip = split_tables(5, 2, 1)
+        ia, ip = jnp.asarray(ia), jnp.asarray(ip)
+        rng = np.random.default_rng(6)
+        m_a = _rand_table(rng, (5, g.n), np.float16)
+        m_p = _rand_table(rng, (5, g.n), np.float16)
+        got = fused_spmm_ema(m_a, m_p, ia, ip, prepare_fused(g))
+        assert got.dtype == jnp.float16
+        want = _oracle(g, m_a.astype(jnp.float32),
+                       m_p.astype(jnp.float32), ia, ip)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want), rtol=1e-3)
+
+    def test_vmem_overflow_falls_back(self, monkeypatch):
+        assert not fused_fits_vmem(4000, 4000, 8000, l=100)
+        # shrink the budget so dispatch takes the XLA fallback, and verify
+        # the kernel is really bypassed (it would raise if called)
+        from repro.kernels.fused import ops as fops
+        monkeypatch.setattr(fops, "_PALLAS_VMEM_BYTES", 1)
+        monkeypatch.setattr(
+            fops, "fused_spmm_ema_pallas",
+            lambda *a, **k: (_ for _ in ()).throw(
+                AssertionError("kernel path taken")))
+        g = GRAPHS["rmat"]()
+        ia, ip = split_tables(5, 3, 1)
+        rng = np.random.default_rng(7)
+        m_a = _rand_table(rng, (5, g.n))
+        m_p = _rand_table(rng, (10, g.n))
+        got = fused_spmm_ema(m_a, m_p, jnp.asarray(ia), jnp.asarray(ip),
+                             prepare_fused(g))
+        want = _oracle(g, m_a, m_p, jnp.asarray(ia), jnp.asarray(ip))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6)
+
+
+class TestFusedEngine:
+    @pytest.mark.parametrize("tname", ["u5", "u7", "u10"])
+    def test_matches_unfused_single_and_batched(self, tname):
+        g = erdos_renyi(60, 4.0, seed=3)
+        t = get_template(tname)
+        base = build_engine(g, t, "pgbsc")
+        fused = build_engine(g, t, "pgbsc", fuse_spmm_ema=True)
+        assert fused.schedule.fused, "expected fused-eligible nodes"
+        colors = coloring_numpy(0, 0, g.n, t.k)
+        want, _ = base.count_colorful(colors)
+        got, _ = fused.count_colorful(colors)
+        np.testing.assert_allclose(float(got), float(want), rtol=1e-6)
+        batch = np.stack([coloring_numpy(0, i, g.n, t.k) for i in range(3)])
+        want_b, _ = base.count_colorful_batch(jnp.asarray(batch))
+        got_b, _ = fused.count_colorful_batch(jnp.asarray(batch))
+        np.testing.assert_allclose(np.asarray(got_b), np.asarray(want_b),
+                                   rtol=1e-6)
+
+    def test_fusion_ignored_off_pgbsc(self):
+        g = erdos_renyi(30, 3.0, seed=1)
+        e = build_engine(g, "u5", "pfascia", fuse_spmm_ema=True)
+        assert not e.fuse_spmm_ema and not e.schedule.fused
+
+    def test_budget_admits_larger_batch(self):
+        g = erdos_renyi(200, 5.0, seed=2)
+        base = build_engine(g, "u10", "pgbsc")
+        fused = build_engine(g, "u10", "pgbsc", fuse_spmm_ema=True)
+        assert fused.exec_choice.peak_bytes_per_coloring < \
+            base.exec_choice.peak_bytes_per_coloring
+        budget = 8 * base.exec_choice.peak_bytes_per_coloring
+        e0 = build_engine(g, "u10", "pgbsc", memory_budget_bytes=budget)
+        e1 = build_engine(g, "u10", "pgbsc", memory_budget_bytes=budget,
+                          fuse_spmm_ema=True)
+        assert e1.batch_size > e0.batch_size
+
+    def test_f64_counts_match_f32_engine(self, x64):
+        # counts are integer-valued; f64 fused path must agree exactly
+        g = erdos_renyi(40, 3.5, seed=8)
+        colors = coloring_numpy(0, 0, g.n, 5)
+        want, _ = build_engine(g, "u5", "pgbsc").count_colorful(colors)
+        e = build_engine(g, "u5", "pgbsc", dtype=jnp.float64,
+                         fuse_spmm_ema=True)
+        assert e.schedule.fused
+        got, _ = e.count_colorful(colors)
+        assert float(got) == float(want)
+
+
+class TestExecutorFusedModel:
+    def _plan(self, tname):
+        return get_template(tname).plan_dedup
+
+    def test_fused_peak_not_higher(self):
+        plan = self._plan("u7")
+        k = 7
+        fused_nodes = tuple(
+            i for i, nd in enumerate(plan.nodes) if not nd.is_leaf)
+        s0 = pexec.compute_schedule(plan, k)
+        s1 = pexec.compute_schedule(plan, k, fused=fused_nodes)
+        p0 = pexec.simulate_peak_rows(plan, k, s0)
+        p1 = pexec.simulate_peak_rows(plan, k, s1)
+        assert p1 <= p0
+        assert s1.fused_set == set(fused_nodes)
+
+    def test_chunking_beats_fusion_on_conflict(self):
+        # a node assigned both chunking and fusion must execute chunked:
+        # the engine dispatch checks packs first, and the schedule keeps
+        # both markers
+        g = erdos_renyi(60, 4.0, seed=3)
+        e = build_engine(g, "u10", "pgbsc", fuse_spmm_ema=True,
+                         memory_budget_bytes=1 << 20)
+        for idx in e.schedule.chunk_map:
+            assert e.schedule.chunk_map[idx] >= 1
+        colors = coloring_numpy(0, 0, g.n, 10)
+        want, _ = build_engine(g, "u10", "pgbsc",
+                               memory_budget_bytes=1 << 20
+                               ).count_colorful(colors)
+        got, _ = e.count_colorful(colors)
+        np.testing.assert_allclose(float(got), float(want), rtol=1e-6)
+
+
+class TestAutotune:
+    def test_ema_blocks_from_candidates(self):
+        autotune.clear_cache()
+        rng = np.random.default_rng(0)
+        m_a = _rand_table(rng, (5, 256))
+        y_p = _rand_table(rng, (10, 256))
+        ia, ip = split_tables(5, 3, 1)
+        ia, ip = jnp.asarray(ia), jnp.asarray(ip)
+        blocks = autotune.ema_blocks(m_a, y_p, ia, ip, interpret=True)
+        assert blocks in autotune.EMA_BLOCK_CANDIDATES
+        # second call is a cache hit
+        n_timed = len(autotune.cache_info())
+        assert autotune.ema_blocks(m_a, y_p, ia, ip,
+                                   interpret=True) == blocks
+        assert len(autotune.cache_info()) == n_timed
+
+    def test_autotuned_ema_matches_ref(self):
+        from repro.kernels.ema.ops import ema
+        from repro.kernels.ema.ref import ema_ref
+        rng = np.random.default_rng(1)
+        m_a = _rand_table(rng, (10, 300))
+        y_p = _rand_table(rng, (10, 300))
+        ia, ip = split_tables(5, 4, 2)
+        ia, ip = jnp.asarray(ia), jnp.asarray(ip)
+        got = ema(m_a, y_p, ia, ip, use_pallas=True, autotune=True)
+        want = ema_ref(m_a, y_p, ia, ip)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=0)
+
+    def test_engine_autotune_matches(self):
+        g = erdos_renyi(50, 4.0, seed=4)
+        colors = coloring_numpy(0, 0, g.n, 5)
+        want, _ = build_engine(g, "u5", "pgbsc").count_colorful(colors)
+        e = build_engine(g, "u5", "pgbsc", use_pallas_ema=True,
+                         autotune_blocks=True)
+        got, _ = e.count_colorful(colors)
+        np.testing.assert_allclose(float(got), float(want), rtol=1e-6)
