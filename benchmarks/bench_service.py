@@ -13,16 +13,26 @@ Rows (CSV, via benchmarks.common):
 * ``service/throughput_mixed``     — requests/sec over a mixed-template,
   distinct-seed workload on a warm service (steady-state scheduling +
   real device work per request).
+* ``service/latency_p50|p95|p99``  — mixed-workload request latency
+  percentiles, read from the obs registry's
+  ``service_request_total_seconds`` histogram (the same numbers a
+  ``serve --metrics-out`` snapshot reports).
+
+A machine-readable summary is written to ``BENCH_service.json`` at the
+repo root (committed, so latency drift shows up in review).
 """
 
 from __future__ import annotations
 
+import json
 import os
 import tempfile
 import time
 
 from benchmarks.common import emit
 from repro.graph import rmat
+from repro.obs.metrics import (MetricsRegistry, get_registry, set_registry,
+                               snapshot)
 from repro.service import CountingService, CountRequest, EstimateCache
 
 GRAPH_SCALE = 9           # 512 vertices
@@ -38,6 +48,8 @@ def _run_one(svc, template, rel=0.1, seed=0):
 
 
 def run() -> dict:
+    # fresh registry: this benchmark owns its counters/histograms
+    set_registry(MetricsRegistry())
     g = rmat(GRAPH_SCALE, EDGE_FACTOR, seed=0)
     out: dict = {}
 
@@ -77,6 +89,8 @@ def run() -> dict:
     warm_svc.add_graph("g", g)
     for t in TEMPLATES:                      # warm engines + compile
         _run_one(warm_svc, t)
+    # reset so the latency histogram covers only the mixed workload
+    get_registry().reset()
     n_req = REQUESTS_PER_TEMPLATE * len(TEMPLATES)
     t0 = time.perf_counter()
     for i in range(n_req):
@@ -87,10 +101,37 @@ def run() -> dict:
     emit("service/throughput_mixed", dt / n_req * 1e6,
          f"req_per_s={n_req / dt:.2f}")
     out["req_per_s"] = n_req / dt
+
+    # per-request latency percentiles from the obs registry -------------
+    hist = get_registry().histogram("service_request_total_seconds")
+    pcts = {"p50": hist.percentile(0.50), "p95": hist.percentile(0.95),
+            "p99": hist.percentile(0.99)}
+    for label, v in pcts.items():
+        emit(f"service/latency_{label}", v * 1e6, f"n={hist.count}")
+        out[f"latency_{label}_ms"] = v * 1e3
+
     st = warm_svc.stats()
     print(f"# warm service: {st['engine_cache']['builds']} builds / "
           f"{st['requests']} requests, "
           f"{st['unique_iterations']} device iterations", flush=True)
+
+    summary = {
+        "bench": "service",
+        "graph": f"rmat:{GRAPH_SCALE} x{EDGE_FACTOR}",
+        "templates": list(TEMPLATES),
+        "requests_mixed": n_req,
+        "cold_s": out["cold_s"], "warm_s": out["warm_s"],
+        "estimate_hit_s": out["estimate_hit_s"],
+        "req_per_s": out["req_per_s"],
+        "latency_ms": {label: v * 1e3 for label, v in pcts.items()},
+        "service_stats": st,
+        "metrics_snapshot": snapshot(),
+    }
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_service.json")
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=1, sort_keys=True)
+    print(f"# wrote {path}", flush=True)
     return out
 
 

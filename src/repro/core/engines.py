@@ -43,6 +43,8 @@ from repro.graph.structure import Graph
 from repro.kernels.ema import ops as ema_ops
 from repro.kernels.fused import ops as fused_ops
 from repro.kernels.spmm import ops as spmm_ops
+from repro.obs import metrics as _metrics
+from repro.obs import tracing as _tracing
 
 __all__ = ["CountingEngine", "build_engine", "ENGINES"]
 
@@ -182,6 +184,9 @@ class CountingEngine:
         self.interpret = interpret
         self.autotune_blocks = autotune_blocks
         self.fuse_spmm_ema = bool(fuse_spmm_ema and engine == "pgbsc")
+        # per-node fusion decisions (idx -> "admitted" | rejection reason);
+        # empty when fusion was not requested
+        self.fusion_report: dict[int, str] = {}
         fused_nodes = self._fused_candidates() if self.fuse_spmm_ema else ()
 
         # budget -> (derived batch size, liveness schedule, chunking); an
@@ -218,28 +223,52 @@ class CountingEngine:
         (b) its resident tables fit one VMEM grid step, and (c) the table
         dtype runs on the kernel path in this mode (otherwise the explicit
         XLA fallback would materialize y and the memory model would lie).
+
+        Every decision lands in :attr:`fusion_report` (``{plan node idx:
+        "admitted" | rejection reason}``) and in the reason-labeled
+        ``fusion_admissions_total`` counters, so a user asking for fusion
+        can see exactly which nodes got it and why the rest did not.
         """
-        if not ema_ops.pallas_supports_dtype(self.dtype, self.interpret):
-            return ()
+        dtype_ok = ema_ops.pallas_supports_dtype(self.dtype, self.interpret)
         uses: dict[int, int] = {}
         for node in self.plan.nodes:
             if not node.is_leaf:
                 uses[node.passive] = uses.get(node.passive, 0) + 1
         out = []
         for idx, node in enumerate(self.plan.nodes):
-            if node.is_leaf or uses[node.passive] != 1:
+            if node.is_leaf:
                 continue
-            t = node.size
-            t_a = self.plan.nodes[node.active].size
-            if fused_ops.fused_fits_vmem(
-                    comb(self.k, t_a), comb(self.k, t - t_a),
-                    comb(self.k, t), l=comb(t, t_a), dtype=self.dtype):
-                out.append(idx)
+            if not dtype_ok:
+                self.fusion_report[idx] = "dtype_unsupported"
+            elif uses[node.passive] != 1:
+                self.fusion_report[idx] = "multi_consumer"
+            else:
+                t = node.size
+                t_a = self.plan.nodes[node.active].size
+                if fused_ops.fused_fits_vmem(
+                        comb(self.k, t_a), comb(self.k, t - t_a),
+                        comb(self.k, t), l=comb(t, t_a), dtype=self.dtype):
+                    self.fusion_report[idx] = "admitted"
+                    out.append(idx)
+                else:
+                    self.fusion_report[idx] = "vmem_overflow"
+        for idx, verdict in self.fusion_report.items():
+            if verdict == "admitted":
+                _metrics.counter("fusion_admissions_total",
+                                 outcome="admitted").inc()
+            else:
+                _metrics.counter("fusion_admissions_total",
+                                 outcome="rejected", reason=verdict).inc()
         return tuple(out)
 
     # -------------------------------------------------------- device state
     def _materialize(self) -> None:
         """Build device arrays and compiled callables (see :meth:`release`)."""
+        with _tracing.span("engine.materialize", engine=self.engine,
+                           k=self.k):
+            self._materialize_inner()
+
+    def _materialize_inner(self) -> None:
         g = self.g
         if self.engine == "pgbsc":
             self._spmm_prep = spmm_ops.prepare(g, self.spmm_method,
@@ -277,6 +306,45 @@ class CountingEngine:
         self._batch_fn = None    # built lazily on first batched call
         self._seeded_fn = None   # jit(seed, iteration ids) -> batch totals
         self._released = False
+        # trace-time watermark: peak live table bytes observed by the
+        # executor's on_step probe (high-watermark across traced shapes)
+        self._trace_peak_bytes = 0
+        # pre-resolved registry counters: one attribute add per dispatch
+        label = self.templates[0].name or "t"
+        self._m_dispatches = _metrics.counter(
+            "engine_dispatches_total", engine=self.engine)
+        self._m_colorings = _metrics.counter(
+            "engine_colorings_dispatched_total", engine=self.engine)
+        self._m_spmm_cols = _metrics.counter(
+            "engine_spmm_cols_dispatched_total", engine=self.engine)
+        self._mem_labels = dict(engine=self.engine, template=label,
+                                k=self.k)
+
+    def _peak_probe(self, step: int, live_bytes: int) -> None:
+        """Executor ``on_step`` hook: record the measured (trace-time) peak
+        live table bytes of the plan walk — the watermark the memory-model
+        validation gauges publish next to the analytic prediction."""
+        if live_bytes > self._trace_peak_bytes:
+            self._trace_peak_bytes = live_bytes
+
+    @property
+    def measured_peak_bytes(self) -> int:
+        """Watermark from the last traced plan walk(s); 0 before any
+        count call. Compare against :attr:`peak_table_bytes` (the model)."""
+        return self._trace_peak_bytes
+
+    def _publish_memory_gauges(self, batch: int) -> None:
+        measured = self._trace_peak_bytes
+        if not measured:
+            return
+        model = self.exec_choice.peak_bytes_per_coloring * max(batch, 1)
+        _metrics.gauge("memory_measured_peak_bytes",
+                       **self._mem_labels).set(measured)
+        _metrics.gauge("memory_model_peak_bytes",
+                       **self._mem_labels).set(model)
+        if model:
+            _metrics.gauge("memory_model_ratio",
+                           **self._mem_labels).set(measured / model)
 
     def release(self) -> None:
         """Drop device arrays and compiled executables.
@@ -314,7 +382,12 @@ class CountingEngine:
         """
         self._ensure()
         self.n_spmm_cols_dispatched += self.spmm_cols_per_coloring
-        return self._count_fn(jnp.asarray(colors))
+        self._m_spmm_cols.inc(self.spmm_cols_per_coloring)
+        with _tracing.span("engine.dispatch", engine=self.engine, batch=1):
+            out = self._count_fn(jnp.asarray(colors))
+            _tracing.sync_ready(out)
+        self._publish_memory_gauges(1)
+        return out
 
     def count_colorful_batch(self, colorings: jax.Array,
                              batch_size: int | None = None
@@ -352,13 +425,21 @@ class CountingEngine:
             if pad:
                 fill = jnp.broadcast_to(chunk[-1:], (pad,) + chunk.shape[1:])
                 chunk = jnp.concatenate([chunk, fill])
-            tot, root = self._batch_fn(chunk)
+            first = self.n_batch_dispatches == 0
+            with _tracing.span("engine.dispatch", engine=self.engine,
+                               batch=bs, first=first):
+                tot, root = self._batch_fn(chunk)
+                _tracing.sync_ready(tot)
             self.n_batch_dispatches += 1
             self.n_colorings_dispatched += bs
             self.n_spmm_cols_dispatched += self.spmm_cols_per_coloring * bs
+            self._m_dispatches.inc()
+            self._m_colorings.inc(bs)
+            self._m_spmm_cols.inc(self.spmm_cols_per_coloring * bs)
             totals.append(tot[: bs - pad])
             roots.append(tuple(r[: bs - pad] for r in root) if self.fused
                          else root[: bs - pad])
+        self._publish_memory_gauges(bs)
         if self.fused:
             root_out = tuple(jnp.concatenate([r[j] for r in roots])
                              for j in range(len(self.roots)))
@@ -400,13 +481,22 @@ class CountingEngine:
         for base in range(0, len(its), bs):
             chunk = its[base: base + bs]
             padded = chunk + [chunk[-1]] * (bs - len(chunk))
-            totals = np.asarray(self._seeded_fn(
-                jnp.int32(seed), jnp.asarray(padded, jnp.int32)))
+            first = self.n_batch_dispatches == 0
+            with _tracing.span("engine.dispatch", engine=self.engine,
+                               batch=bs, first=first):
+                # np.asarray already blocks on the device result, so this
+                # span measures real device time without an extra sync
+                totals = np.asarray(self._seeded_fn(
+                    jnp.int32(seed), jnp.asarray(padded, jnp.int32)))
             self.n_batch_dispatches += 1
             self.n_colorings_dispatched += bs
             self.n_spmm_cols_dispatched += self.spmm_cols_per_coloring * bs
+            self._m_dispatches.inc()
+            self._m_colorings.inc(bs)
+            self._m_spmm_cols.inc(self.spmm_cols_per_coloring * bs)
             for i, it in enumerate(chunk):
                 out[it] = totals[i].copy() if self.fused else float(totals[i])
+        self._publish_memory_gauges(bs)
         return out
 
     def estimate(self, n_iters: int, seed: int = 0,
@@ -518,6 +608,7 @@ class CountingEngine:
             leaf = self._leaf_table_cn(colors)
             outs = runner.run(leaf, passive_op=passive_op, combine=combine,
                               combine_direct=combine_direct,
+                              on_step=self._peak_probe,
                               outputs=self.roots)
             if not self.fused:
                 root = outs[0]
@@ -580,6 +671,7 @@ class CountingEngine:
                 leaf,
                 passive_op=None if not pruned else passive_op,
                 combine=combine, combine_direct=combine_direct,
+                on_step=self._peak_probe,
                 outputs=self.roots)
             if not self.fused:
                 root = outs[0]

@@ -36,6 +36,8 @@ from math import comb
 
 import numpy as np
 
+from repro.obs import tracing as _tracing
+
 __all__ = [
     "Schedule", "ExecutionChoice", "PlanExecutor",
     "liveness", "compute_schedule", "simulate_peak_rows",
@@ -607,19 +609,27 @@ class PlanExecutor:
                 m_a = tables[node.active]
                 direct = (not sched.passive_cache) \
                     or chunks.get(idx, 1) > 1 or idx in fset
-                if direct:
-                    tables[idx] = combine_direct(idx, m_a,
-                                                 tables[node.passive])
-                else:
-                    if node.passive not in y:
-                        y[node.passive] = passive_op(node.passive,
+                mode = ("chunked" if chunks.get(idx, 1) > 1
+                        else "fused" if idx in fset
+                        else "direct" if direct else "cached")
+                # spans here run at jit-trace time (once per compiled
+                # shape): they expose per-node plan structure, not device
+                # time — that belongs to the engine's dispatch span
+                with _tracing.span("plan.node", idx=idx, size=node.size,
+                                   mode=mode):
+                    if direct:
+                        tables[idx] = combine_direct(idx, m_a,
                                                      tables[node.passive])
-                        # mid-step release: the passive table may die the
-                        # moment its y entry exists
-                        if node.passive in sched.free_tables[step] \
-                                and node.passive != node.active:
-                            tables.pop(node.passive, None)
-                    tables[idx] = combine(idx, m_a, y[node.passive])
+                    else:
+                        if node.passive not in y:
+                            y[node.passive] = passive_op(
+                                node.passive, tables[node.passive])
+                            # mid-step release: the passive table may die
+                            # the moment its y entry exists
+                            if node.passive in sched.free_tables[step] \
+                                    and node.passive != node.active:
+                                tables.pop(node.passive, None)
+                        tables[idx] = combine(idx, m_a, y[node.passive])
                 m_a = None
             if on_step is not None:
                 on_step(step, self._live_bytes(tables, y))

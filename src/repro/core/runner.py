@@ -28,6 +28,8 @@ import time
 import numpy as np
 
 from repro.core.colorsets import colorful_probability
+from repro.obs import metrics as _metrics
+from repro.obs import tracing as _tracing
 
 __all__ = ["EstimatorRunner", "RunnerResult"]
 
@@ -90,6 +92,9 @@ class EstimatorRunner:
             self._led = self._load_ledger()
             if self._led["completed"]:
                 self._led["restarts"] = self._led.get("restarts", 0) + 1
+                _metrics.counter("runner_resumes_total").inc()
+                _metrics.counter("runner_resumed_iterations_total").inc(
+                    len(self._led["completed"]))
         return self._led
 
     def _save_ledger(self, led: dict) -> None:
@@ -117,12 +122,19 @@ class EstimatorRunner:
         done = {int(k): v for k, v in led["completed"].items()}
         ids = [int(i) for i in iterations]
         pending = [i for i in ids if i not in done]
+        if len(pending) < len(ids):
+            _metrics.counter("runner_ledger_served_iterations_total").inc(
+                len(ids) - len(pending))
         for base in range(0, len(pending), self.checkpoint_every):
             batch = pending[base: base + self.checkpoint_every]
-            for it, val in self.counter(batch).items():
+            with _tracing.span("runner.checkpoint", n=len(batch)):
+                results = self.counter(batch)
+            for it, val in results.items():
                 done[int(it)] = float(val)
             led["completed"] = {str(k): v for k, v in done.items()}
             self._save_ledger(led)
+            _metrics.counter("runner_checkpoints_total").inc()
+            _metrics.counter("runner_iterations_total").inc(len(batch))
         return {i: done[i] for i in ids}
 
     def run(self, max_iterations_this_call: int | None = None) -> RunnerResult:
@@ -138,11 +150,14 @@ class EstimatorRunner:
 
         for base in range(0, len(pending), self.checkpoint_every):
             batch = pending[base: base + self.checkpoint_every]
-            results = self.counter(batch)
+            with _tracing.span("runner.checkpoint", n=len(batch)):
+                results = self.counter(batch)
             for it, val in results.items():
                 done[int(it)] = float(val)
             led["completed"] = {str(k): v for k, v in done.items()}
             self._save_ledger(led)
+            _metrics.counter("runner_checkpoints_total").inc()
+            _metrics.counter("runner_iterations_total").inc(len(batch))
 
         total = float(np.sum(list(done.values()))) if done else 0.0
         n_done = len(done)

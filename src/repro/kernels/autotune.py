@@ -20,6 +20,9 @@ from typing import Callable, Hashable, Sequence
 import jax
 import numpy as np
 
+from repro.obs import metrics as _metrics
+from repro.obs import tracing as _tracing
+
 __all__ = ["autotune", "ema_blocks", "spmm_c_block", "cache_info",
            "clear_cache", "EMA_BLOCK_CANDIDATES", "SPMM_C_BLOCK_CANDIDATES"]
 
@@ -62,16 +65,22 @@ def autotune(key: Hashable, candidates: Sequence, make_fn: Callable,
     winner is cached under ``key``; on total failure the first candidate is
     cached so the sweep never repeats.
     """
+    kind = str(key[0]) if isinstance(key, tuple) and key else "unknown"
     if key in _CACHE:
+        _metrics.counter("autotune_cache_total", kind=kind,
+                         result="hit").inc()
         return _CACHE[key]
+    _metrics.counter("autotune_cache_total", kind=kind, result="miss").inc()
     best, best_t = None, float("inf")
-    for cand in candidates:
-        try:
-            t = _time_once(make_fn(cand), reps=reps)
-        except Exception:
-            continue
-        if t < best_t:
-            best, best_t = cand, t
+    with _tracing.span("autotune.sweep", kind=kind,
+                       candidates=len(candidates)):
+        for cand in candidates:
+            try:
+                t = _time_once(make_fn(cand), reps=reps)
+            except Exception:
+                continue
+            if t < best_t:
+                best, best_t = cand, t
     if best is None:
         best = candidates[0]
     _CACHE[key] = best

@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.kernels import autotune as _autotune
 from repro.kernels.ema.pallas_ema import ema_pallas
+from repro.obs import metrics as _metrics
 
 __all__ = ["ema", "ema_xla", "ema_chunked", "pack_chunked_splits",
            "ChunkedSplits", "ema_flops", "pallas_supports_dtype"]
@@ -68,15 +69,24 @@ def ema(m_a: jnp.ndarray, y_p: jnp.ndarray, ia: jnp.ndarray, ip: jnp.ndarray,
     ``s_block``/``n_block`` override the defaults; ``autotune=True`` sweeps
     :data:`repro.kernels.autotune.EMA_BLOCK_CANDIDATES` once per shape."""
     dtype = jnp.promote_types(m_a.dtype, y_p.dtype)
-    if use_pallas and pallas_supports_dtype(dtype, interpret):
-        if autotune and (s_block is None or n_block is None):
-            s_block, n_block = _autotune.ema_blocks(m_a, y_p, ia, ip,
-                                                    interpret=interpret)
-        sb = s_block or _PALLAS_S_BLOCK
-        nb = n_block or _PALLAS_N_BLOCK
-        if _fits_vmem(m_a, y_p, n_block=nb, s_block=sb):
-            return ema_pallas(m_a, y_p, ia, ip, s_block=sb, n_block=nb,
-                              interpret=interpret)
+    if use_pallas:
+        if not pallas_supports_dtype(dtype, interpret):
+            _metrics.counter("kernel_fallbacks_total", kernel="ema",
+                             reason="dtype_unsupported").inc()
+        else:
+            if autotune and (s_block is None or n_block is None):
+                s_block, n_block = _autotune.ema_blocks(m_a, y_p, ia, ip,
+                                                        interpret=interpret)
+            sb = s_block or _PALLAS_S_BLOCK
+            nb = n_block or _PALLAS_N_BLOCK
+            if _fits_vmem(m_a, y_p, n_block=nb, s_block=sb):
+                _metrics.counter("kernel_launches_total", kernel="ema",
+                                 path="pallas").inc()
+                return ema_pallas(m_a, y_p, ia, ip, s_block=sb, n_block=nb,
+                                  interpret=interpret)
+            _metrics.counter("kernel_fallbacks_total", kernel="ema",
+                             reason="vmem_overflow").inc()
+    _metrics.counter("kernel_launches_total", kernel="ema", path="xla").inc()
     return ema_xla(m_a, y_p, ia, ip)
 
 

@@ -24,7 +24,9 @@ import numpy as np
 from repro.graph.structure import Graph
 from repro.kernels.ema.ops import (_PALLAS_VMEM_BYTES, ema_xla,
                                    pallas_supports_dtype)
-from repro.kernels.fused.pallas_fused import fused_spmm_ema_pallas
+from repro.kernels.fused.pallas_fused import (batch_block_fits,
+                                              fused_spmm_ema_pallas)
+from repro.obs import metrics as _metrics
 
 __all__ = ["FusedPrep", "prepare_fused", "fused_spmm_ema", "fused_fits_vmem"]
 
@@ -86,6 +88,8 @@ def _fallback(m_a, m_p, ia, ip, prep: FusedPrep) -> jnp.ndarray:
     """Unfused XLA pair — the explicit escape hatch for unsupported dtypes
     or VMEM-oversized tables (matches the kernel to float reassociation)."""
     from repro.kernels.spmm.ops import _spmm_segment
+    _metrics.counter("kernel_launches_total", kernel="fused",
+                     path="xla").inc()
     lead = m_p.shape[:-2]
     flat = m_p.reshape((-1, m_p.shape[-1]))
     y = _spmm_segment(flat, prep.arrays["fb_src"], prep.arrays["fb_dst"],
@@ -107,11 +111,27 @@ def fused_spmm_ema(m_a: jnp.ndarray, m_p: jnp.ndarray,
     """
     st = prep.static
     dtype = jnp.promote_types(m_a.dtype, m_p.dtype)
-    if not pallas_supports_dtype(dtype, st["interpret"]) \
-            or not fused_fits_vmem(m_a.shape[-2], m_p.shape[-2], ia.shape[0],
-                                   l=ia.shape[1], tile=st["tile"],
-                                   dtype=dtype):
+    # every fallback decision is reason-counted (once per traced shape),
+    # so "asked for the fused kernel, got the XLA pair" is never silent
+    if not pallas_supports_dtype(dtype, st["interpret"]):
+        _metrics.counter("kernel_fallbacks_total", kernel="fused",
+                         reason="dtype_unsupported").inc()
         return _fallback(m_a, m_p, ia, ip, prep)
+    if not fused_fits_vmem(m_a.shape[-2], m_p.shape[-2], ia.shape[0],
+                           l=ia.shape[1], tile=st["tile"], dtype=dtype):
+        _metrics.counter("kernel_fallbacks_total", kernel="fused",
+                         reason="vmem_overflow").inc()
+        return _fallback(m_a, m_p, ia, ip, prep)
+    s_pad = -(-ia.shape[0] // 8) * 8
+    if not batch_block_fits(1, m_a.shape[-2], m_p.shape[-2], s_pad,
+                            ia.shape[1], st["tile"],
+                            np.dtype(dtype).itemsize):
+        # even a single-coloring batch block oversubscribes VMEM
+        _metrics.counter("kernel_fallbacks_total", kernel="fused",
+                         reason="batch_block").inc()
+        return _fallback(m_a, m_p, ia, ip, prep)
+    _metrics.counter("kernel_launches_total", kernel="fused",
+                     path="pallas").inc()
     batched = m_a.ndim > 2
     lead = m_a.shape[:-2]
     n = m_a.shape[-1]

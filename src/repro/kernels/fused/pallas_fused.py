@@ -42,27 +42,30 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["fused_spmm_ema_pallas", "pick_batch_block"]
+__all__ = ["fused_spmm_ema_pallas", "pick_batch_block", "batch_block_fits"]
 
 # conservative per-core VMEM working-set budget (matches ema.ops)
 _VMEM_BUDGET = 12 * 1024 * 1024
 
 
+def batch_block_fits(bb: int, c_a: int, c_p: int, s_pad: int, l: int,
+                     tile: int, itemsize: int) -> bool:
+    """Whether a ``bb``-coloring batch block's fused working set fits VMEM:
+    ``bb`` copies of the active block, the passive block, the y scratch,
+    and the output block, plus one adjacency tile and the (batch-free)
+    selection matrices."""
+    per_b = (c_a + 2 * c_p + s_pad) * tile
+    fixed = tile * tile + l * s_pad * (c_a + c_p)
+    return (bb * per_b + fixed) * itemsize < _VMEM_BUDGET
+
+
 def pick_batch_block(b: int, c_a: int, c_p: int, s_pad: int, l: int,
                      tile: int, itemsize: int) -> int:
-    """Largest batch block whose fused working set fits the VMEM budget.
-
-    Per grid step the kernel holds ``bb`` copies of the active block, the
-    passive block, the y scratch, and the output block, plus one adjacency
-    tile and the (batch-free) selection matrices.
-    """
-    def fits(bb: int) -> bool:
-        per_b = (c_a + 2 * c_p + s_pad) * tile
-        fixed = tile * tile + l * s_pad * (c_a + c_p)
-        return (bb * per_b + fixed) * itemsize < _VMEM_BUDGET
-
+    """Largest batch block whose fused working set fits the VMEM budget
+    (see :func:`batch_block_fits`); floors at 1."""
     bb = max(1, b)
-    while bb > 1 and not fits(bb):
+    while bb > 1 and not batch_block_fits(bb, c_a, c_p, s_pad, l, tile,
+                                          itemsize):
         bb = -(-bb // 2)
     return bb
 

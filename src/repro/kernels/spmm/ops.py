@@ -25,6 +25,7 @@ from repro.kernels import autotune as _autotune
 from repro.kernels.ema import ops as ema_ops
 from repro.kernels.spmm.pallas_bsr import spmm_bsr_pallas
 from repro.kernels.spmm.pallas_gather import spmm_gather_pallas
+from repro.obs import metrics as _metrics
 
 __all__ = ["prepare", "spmm", "spmm_row_chunks", "SpmmPrep", "METHODS"]
 
@@ -151,7 +152,15 @@ def spmm(m: jnp.ndarray, prep: SpmmPrep, *, c_block: int | None = None,
         return m @ a["a"].astype(m.dtype)
     st = prep.static
     if not ema_ops.pallas_supports_dtype(m.dtype, st["interpret"]):
+        # explicit XLA fallback — count it so "asked for Pallas, got XLA"
+        # is observable (incremented once per traced shape under jit)
+        _metrics.counter("kernel_fallbacks_total", kernel="spmm",
+                         reason="dtype_unsupported").inc()
+        _metrics.counter("kernel_launches_total", kernel="spmm",
+                         path="xla").inc()
         return _spmm_segment(m, a["fb_src"], a["fb_dst"], prep.n)
+    _metrics.counter("kernel_launches_total", kernel="spmm",
+                     path=prep.method).inc()
     n_pad = st["n_tiles"] * st["tile"]
     m_pad = jnp.pad(m, ((0, 0), (0, n_pad - m.shape[1]))) if n_pad != m.shape[1] else m
 

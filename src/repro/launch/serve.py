@@ -26,6 +26,9 @@ import json
 
 from repro.core.templates import TemplateSpec
 from repro.graph import erdos_renyi, rmat
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracing as obs_tracing
+from repro.obs.validate import validate_snapshot
 from repro.service import CountingService, CountRequest
 from repro.service.cache import DEFAULT_MAX_ENTRIES, EngineCache
 
@@ -76,7 +79,24 @@ def main(argv=None):
                     default=DEFAULT_MAX_ENTRIES,
                     help="max resident engines; evicted engines release "
                          "their device arrays and compiled fns")
+    ap.add_argument("--fuse", action="store_true",
+                    help="enable the fused SpMM->eMA Pallas kernel path")
+    ap.add_argument("--trace", action="store_true",
+                    help="enable span tracing with device-sync timing; "
+                         "prints a per-request latency breakdown "
+                         "(queue/compile/execute) and a span summary")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="write the metrics-registry snapshot (validated "
+                         "JSON, schema v1) to FILE on exit")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="arm a one-shot jax.profiler trace around the "
+                         "first device dispatch, written to DIR")
     args = ap.parse_args(argv)
+
+    if args.trace:
+        obs_tracing.configure(enabled=True, sync=True)
+    if args.profile_dir:
+        obs_tracing.arm_profiler(args.profile_dir)
 
     g = _load_graph(args.graph, args.edge_list)
     print(f"serving graph: n={g.n} edge-slots={g.m} "
@@ -89,7 +109,8 @@ def main(argv=None):
         default_max_iters=args.iters, batch_size=args.batch_size,
         memory_budget_bytes=budget,
         engine_cache=EngineCache(max_entries=args.engine_cache_size),
-        estimate_cache=args.results_cache)
+        estimate_cache=args.results_cache,
+        engine_kw={"fuse_spmm_ema": True} if args.fuse else None)
     svc.add_graph("g", g)
     templates: list = [t for t in args.templates.split(",") if t]
     for i, es in enumerate(args.template_edges):
@@ -116,6 +137,15 @@ def main(argv=None):
               f"+- {res.stderr:.3g} (rel={res.rel_stderr:.3g}, "
               f"ci95=[{lo:.6g}, {hi:.6g}], {res.iterations} iters, "
               f"{res.seconds:.1f}s{', ' + '+'.join(tags) if tags else ''})")
+        if args.trace and res.breakdown:
+            b = res.breakdown
+            accounted = b["queue_s"] + b["compile_s"] + b["execute_s"]
+            pct = 100.0 * accounted / b["total_s"] if b["total_s"] else 100.0
+            print(f"      breakdown: queue={b['queue_s'] * 1e3:.1f}ms "
+                  f"compile={b['compile_s'] * 1e3:.1f}ms "
+                  f"execute={b['execute_s'] * 1e3:.1f}ms "
+                  f"total={b['total_s'] * 1e3:.1f}ms "
+                  f"({pct:.1f}% accounted)")
 
     stats = svc.stats()
     results["_service"] = stats
@@ -128,6 +158,23 @@ def main(argv=None):
         print(f"adaptive stopping: {used} device iterations vs "
               f"{fixed} fixed-budget baseline "
               f"({100 * (1 - used / max(fixed, 1)):.0f}% saved)")
+
+    if args.trace:
+        agg = obs_tracing.get_tracer().breakdown()
+        print("span summary (count, total seconds):")
+        for name, ent in sorted(agg.items(),
+                                key=lambda kv: -kv[1]["seconds"]):
+            print(f"  {name:<24s} x{ent['count']:<5d} "
+                  f"{ent['seconds']:.3f}s")
+    if args.metrics_out:
+        snap = obs_metrics.snapshot()
+        validate_snapshot(snap)
+        with open(args.metrics_out, "w") as f:
+            json.dump(snap, f, indent=1, sort_keys=True)
+        print(f"metrics snapshot (schema {snap['schema']}, "
+              f"{len(snap['counters'])} counters, "
+              f"{len(snap['histograms'])} histograms) "
+              f"-> {args.metrics_out}")
     print(json.dumps(results, indent=1))
 
 

@@ -31,6 +31,8 @@ from repro.core import build_engine
 from repro.core.engines import CountingEngine
 from repro.core.templates import TemplateSpec, as_template
 from repro.graph.structure import Graph
+from repro.obs import metrics as _metrics
+from repro.obs import tracing as _tracing
 
 __all__ = ["EngineCache", "EstimateCache", "SCHEMA_VERSION"]
 
@@ -92,12 +94,17 @@ class EngineCache:
         k = self.key(g, template, engine, plan, **build_kw)
         if k in self._engines:
             self.hits += 1
+            _metrics.counter("engine_cache_lookups_total",
+                             result="hit").inc()
             self._engines.move_to_end(k)
             return self._engines[k]
         self.misses += 1
-        eng = build_engine(g, _template_build_arg(template), engine,
-                           plan=plan, **build_kw)
+        _metrics.counter("engine_cache_lookups_total", result="miss").inc()
+        with _tracing.span("engine_cache.build", engine=engine, plan=plan):
+            eng = build_engine(g, _template_build_arg(template), engine,
+                               plan=plan, **build_kw)
         self.builds += 1
+        _metrics.counter("engine_cache_builds_total").inc()
         self._engines[k] = eng
         if self.max_entries is not None:
             while len(self._engines) > self.max_entries:
@@ -105,6 +112,7 @@ class EngineCache:
                 if hasattr(old, "release"):
                     old.release()
                 self.evictions += 1
+                _metrics.counter("engine_cache_evictions_total").inc()
         return eng
 
     def resident_ids(self) -> set[int]:
@@ -137,6 +145,10 @@ class EstimateCache:
     def __init__(self, path: str | None = None):
         self.path = path
         self._mem: dict[str, dict] = {}
+        self.hits = 0
+        self.misses = 0
+        self.writes = 0
+        self.invalidations = 0
         if path and os.path.isfile(path):
             try:
                 with open(path) as f:
@@ -147,6 +159,11 @@ class EstimateCache:
                     and data.get("schema") == SCHEMA_VERSION
                     and isinstance(data.get("entries"), dict)):
                 self._mem = data["entries"]
+            else:
+                # stale schema / unreadable file: discarded, not crashed on
+                self.invalidations += 1
+                _metrics.counter("estimate_cache_invalidations_total",
+                                 reason="schema").inc()
 
     @staticmethod
     def key(graph_fingerprint: str, template, engine: str, plan: str,
@@ -166,6 +183,18 @@ class EstimateCache:
         samples — the same early-stop guard the scheduler enforces; at
         least as many iterations as a pure iteration-cap request would
         run)."""
+        ent = self._satisfies(key, rel_stderr, max_iters, min_iters)
+        if ent is None:
+            self.misses += 1
+            _metrics.counter("estimate_cache_lookups_total",
+                             result="miss").inc()
+        else:
+            self.hits += 1
+            _metrics.counter("estimate_cache_lookups_total",
+                             result="hit").inc()
+        return ent
+
+    def _satisfies(self, key, rel_stderr, max_iters, min_iters):
         ent = self._mem.get(key)
         if ent is None:
             return None
@@ -177,6 +206,8 @@ class EstimateCache:
 
     def put(self, key: str, entry: dict) -> None:
         self._mem[key] = entry
+        self.writes += 1
+        _metrics.counter("estimate_cache_writes_total").inc()
         if self.path:
             os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
             tmp = self.path + ".tmp"
@@ -186,3 +217,12 @@ class EstimateCache:
 
     def __len__(self) -> int:
         return len(self._mem)
+
+    def stats(self) -> dict:
+        """Same contract as :meth:`EngineCache.stats`: lookup hits/misses
+        (``satisfies`` calls — the serve-from-cache decision point),
+        writes, schema invalidations, and resident entry count."""
+        return {"hits": self.hits, "misses": self.misses,
+                "writes": self.writes,
+                "invalidations": self.invalidations,
+                "resident": len(self._mem)}

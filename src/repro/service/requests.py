@@ -111,6 +111,9 @@ class RequestResult:
     from_cache: bool = False      # served by the persistent estimate cache
     shared_group: bool = False    # joined an existing dispatch group
     seconds: float = 0.0
+    # per-request latency attribution (queue_s / compile_s / execute_s /
+    # total_s), filled by the scheduler at retirement; None for cache hits
+    breakdown: dict | None = None
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)

@@ -34,6 +34,8 @@ import dataclasses
 from repro.core.colorsets import colorful_probability
 from repro.core.runner import EstimatorRunner, engine_counter
 from repro.graph.structure import Graph
+from repro.obs import metrics as _metrics
+from repro.obs import tracing as _tracing
 from repro.service.cache import EngineCache, EstimateCache
 from repro.service.requests import (CountRequest, RequestResult,
                                     RequestStatus, RunningStat)
@@ -67,6 +69,13 @@ class _ReqState:
     result: RequestResult | None = None
     error: str | None = None
     t_submit: float = 0.0
+    # latency attribution (perf_counter clock): submit -> attach start is
+    # queue time, engine build inside attach is compile time, attach end ->
+    # retire is execute time
+    t_submit_pc: float = 0.0
+    t_attach_pc: float = 0.0
+    queue_s: float = 0.0
+    build_s: float = 0.0
 
     @property
     def cap(self) -> int:
@@ -157,7 +166,8 @@ class CountingService:
         self._seq += 1
         rid = f"r{self._seq:04d}"
         st = _ReqState(request=request, status=RequestStatus.PENDING,
-                       stat=RunningStat(), t_submit=time.time())
+                       stat=RunningStat(), t_submit=time.time(),
+                       t_submit_pc=time.perf_counter())
         st._default_cap = self.default_max_iters
         fp = self.graphs[request.graph].fingerprint
         ck = EstimateCache.key(fp, request.spec, request.engine,
@@ -176,6 +186,8 @@ class CountingService:
                       float(ent["estimate"]) + 1.96 * se),
                 iterations=int(ent["iterations"]), target_met=True,
                 from_cache=True, seconds=0.0)
+            _metrics.counter("service_requests_total",
+                             status="cached").inc()
         self._requests[rid] = st
         return rid
 
@@ -193,18 +205,28 @@ class CountingService:
         st = self._requests[rid]
         if st.status in (RequestStatus.PENDING, RequestStatus.RUNNING):
             st.status = RequestStatus.CANCELLED
+            _metrics.counter("service_requests_total",
+                             status="cancelled").inc()
 
     # ----------------------------------------------------------- scheduling
     def _attach(self, rid: str, st: _ReqState) -> None:
+        t_start = time.perf_counter()
+        st.queue_s = max(0.0, t_start - st.t_submit_pc)
+        _metrics.histogram("service_request_queue_seconds").observe(
+            st.queue_s)
         g = self.graphs[st.request.graph]
         key = st.request.group_key(g.fingerprint)
         grp = self._groups.get(key)
         if grp is None:
             spec = st.request.spec
             t = spec.tree
+            t_build = time.perf_counter()
             eng = self.engine_cache.get(
                 g, spec, st.request.engine,
                 st.request.plan, **self.engine_kw)
+            # compile time is attributed to the group creator; joiners
+            # inherit a warm engine and report build_s = 0
+            st.build_s = time.perf_counter() - t_build
             scale = 1.0 / (t.automorphisms * colorful_probability(t.k))
             # canonical hash, not name: two spellings of one tree resume
             # the same ledger
@@ -233,6 +255,7 @@ class CountingService:
         grp.members.append(rid)
         st.group_key = key
         st.status = RequestStatus.RUNNING
+        st.t_attach_pc = time.perf_counter()
 
     def _satisfied(self, st: _ReqState) -> bool:
         n = st.stat.n
@@ -246,12 +269,23 @@ class CountingService:
         stat = st.stat
         tgt = st.request.rel_stderr
         st.status = RequestStatus.DONE
+        now = time.perf_counter()
+        total_s = max(0.0, now - st.t_submit_pc)
+        execute_s = max(0.0, now - st.t_attach_pc)
+        breakdown = {"queue_s": st.queue_s, "compile_s": st.build_s,
+                     "execute_s": execute_s, "total_s": total_s}
+        _metrics.histogram("service_request_compile_seconds").observe(
+            st.build_s)
+        _metrics.histogram("service_request_execute_seconds").observe(
+            execute_s)
+        _metrics.histogram("service_request_total_seconds").observe(total_s)
+        _metrics.counter("service_requests_total", status="done").inc()
         st.result = RequestResult(
             estimate=stat.mean, stderr=stat.stderr,
             rel_stderr=stat.rel_stderr, ci95=stat.ci95, iterations=stat.n,
             target_met=(tgt is None or stat.rel_stderr <= tgt),
             from_cache=False, shared_group=st.shared_group,
-            seconds=time.time() - st.t_submit)
+            seconds=time.time() - st.t_submit, breakdown=breakdown)
         g = self.graphs[st.request.graph]
         ck = EstimateCache.key(g.fingerprint, st.request.spec,
                                st.request.engine, st.request.plan,
@@ -289,35 +323,51 @@ class CountingService:
         group by one ``round_size`` batch — a single device dispatch per
         group regardless of how many tenants share it — and consume again.
         """
-        for rid, st in list(self._requests.items()):
-            if st.status is RequestStatus.PENDING:
+        _metrics.counter("service_rounds_total").inc()
+        with _tracing.span("service.round"):
+            for rid, st in list(self._requests.items()):
+                if st.status is RequestStatus.PENDING:
+                    try:
+                        self._attach(rid, st)
+                    except Exception as exc:  # unknown engine/plan, build
+                        st.status = RequestStatus.FAILED
+                        st.error = f"{type(exc).__name__}: {exc}"
+                        _metrics.counter("service_requests_total",
+                                         status="failed").inc()
+            self._consume_and_retire()
+            for grp in self._groups.values():
+                live = self._live_members(grp)
+                if not live:
+                    continue
+                # never dispatch past the last live member's remaining
+                # budget (every request has a cap — adaptive ones the
+                # service default)
+                need = max(m.cap - m.stat.n for m in live)
+                n_new = min(self.round_size, max(need, 1))
+                ids = list(range(grp.cursor, grp.cursor + n_new))
+                t_disp = time.perf_counter()
                 try:
-                    self._attach(rid, st)
-                except Exception as exc:  # unknown engine/plan, build failure
-                    st.status = RequestStatus.FAILED
-                    st.error = f"{type(exc).__name__}: {exc}"
-        self._consume_and_retire()
-        for grp in self._groups.values():
-            live = self._live_members(grp)
-            if not live:
-                continue
-            # never dispatch past the last live member's remaining budget
-            # (every request has a cap — adaptive ones the service default)
-            need = max(m.cap - m.stat.n for m in live)
-            n_new = min(self.round_size, max(need, 1))
-            ids = list(range(grp.cursor, grp.cursor + n_new))
-            try:
-                per = grp.runner.run_iterations(ids)
-            except Exception as exc:
-                for m in live:
-                    m.status = RequestStatus.FAILED
-                    m.error = f"{type(exc).__name__}: {exc}"
-                continue
-            for i in ids:
-                grp.history.append(per[i] * grp.scale)
-            grp.cursor += n_new
-        self._consume_and_retire()
-        self._release_idle_engines()
+                    with _tracing.span("service.dispatch",
+                                       group=grp.graph_name,
+                                       engine=grp.key[2], n=n_new,
+                                       tenants=len(live)):
+                        with _tracing.profiled_dispatch():
+                            per = grp.runner.run_iterations(ids)
+                except Exception as exc:
+                    for m in live:
+                        m.status = RequestStatus.FAILED
+                        m.error = f"{type(exc).__name__}: {exc}"
+                        _metrics.counter("service_requests_total",
+                                         status="failed").inc()
+                    continue
+                _metrics.counter("service_dispatches_total").inc()
+                _metrics.histogram("service_dispatch_seconds").observe(
+                    time.perf_counter() - t_disp)
+                for i in ids:
+                    grp.history.append(per[i] * grp.scale)
+                grp.cursor += n_new
+            self._consume_and_retire()
+            self._release_idle_engines()
         return sum(st.status in (RequestStatus.PENDING, RequestStatus.RUNNING)
                    for st in self._requests.values())
 
@@ -356,14 +406,16 @@ class CountingService:
 
     # ------------------------------------------------------------- insight
     def stats(self) -> dict:
-        """Service-level accounting: engine-cache behavior, group count,
-        unique device iterations vs. per-request iterations consumed."""
+        """Service-level accounting: engine- and estimate-cache behavior,
+        group count, unique device iterations vs. per-request iterations
+        consumed."""
         consumed = sum(st.result.iterations for st in self._requests.values()
                        if st.result is not None and not st.from_cache)
         return {
             "requests": len(self._requests),
             "groups": len(self._groups),
             "engine_cache": self.engine_cache.stats(),
+            "estimate_cache": self.estimate_cache.stats(),
             "unique_iterations": sum(g.cursor for g in self._groups.values()),
             "consumed_iterations": consumed,
         }
