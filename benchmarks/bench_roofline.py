@@ -20,6 +20,19 @@ Host peaks are measured crudely with a matmul (compute) and a triad
 interpret mode, so absolute numbers are emulation-scale — the fused-vs-
 unfused *ratios* are the portable signal.
 
+Three locality/precision sections ride along (PR 8):
+
+- ``reorder``: occupied BSR blocks, block density, and fused-kernel grid
+  steps before vs after RCM / degree reordering of the bench graph.
+- ``dtype``: the fused kernel timed with float32 vs bfloat16 storage
+  (f32 accumulation), per-variant achieved bandwidth on each variant's
+  own modeled bytes, and the workload-bandwidth gain — the same logical
+  table traffic delivered per second — plus engine-level count error.
+- ``shared_passive``: the shared-passive group launch (one SpMM leg for
+  N consumers) against per-consumer fused launches on a two-template
+  bundle whose plan shares a path2 passive, with the SpMM column-op
+  model for both.
+
     PYTHONPATH=src python -m benchmarks.bench_roofline [--smoke] [--out F]
 
 writes BENCH_roofline.json (repo root by default).
@@ -40,8 +53,10 @@ from benchmarks.common import emit, timeit
 from repro.analysis.roofline import (KernelRoofline, spmm_ema_flops,
                                      spmm_ema_hbm_bytes)
 from repro.core import build_engine, colorsets as cs, get_template
+from repro.core.templates import TreeTemplate
 from repro.graph import rmat
 from repro.graph.coloring import coloring_numpy
+from repro.graph.reorder import ORDERINGS, apply_order
 from repro.kernels.ema import ops as ema_ops
 from repro.kernels.fused import ops as fused_ops
 from repro.kernels.fused.pallas_fused import pick_batch_block
@@ -173,6 +188,133 @@ def _admission_section(g, tmpl_name: str,
             peak_bytes_per_coloring}
 
 
+def _reorder_section(g) -> dict:
+    """Occupied BSR blocks / density / fused grid steps, before vs after."""
+    before = g.bsr_block_stats()
+    grid_before = int(np.asarray(
+        fused_ops.prepare_fused(g, interpret=True).arrays["src_tile"]).size)
+    out = {"before": {**before, "fused_grid_steps": grid_before}}
+    for name, fn in sorted(ORDERINGS.items()):
+        gp = apply_order(g, fn(g))
+        after = gp.bsr_block_stats()
+        grid = int(np.asarray(
+            fused_ops.prepare_fused(gp, interpret=True)
+            .arrays["src_tile"]).size)
+        out[name] = {**after, "fused_grid_steps": grid}
+        emit(f"reorder/{name}/occupied_blocks", 0.0,
+             f"{before['occupied_blocks']}->{after['occupied_blocks']}"
+             f"|grid={grid_before}->{grid}")
+    return out
+
+
+def _dtype_section(g, peaks, *, batch: int, reps: int) -> dict:
+    """Fused kernel, float32 vs bfloat16 storage (f32 accumulation).
+
+    Per-variant achieved bandwidth divides each variant's OWN modeled
+    bytes (bf16 streams half the physical table/adjacency bytes) by its
+    measured seconds. ``workload_bw_gain`` is the portable headline: both
+    variants deliver the identical logical table traffic, so the gain in
+    logical bytes per second equals the measured speedup.
+    """
+    peak_flops, peak_bw = peaks
+    k, t, t_a = 5, 3, 1
+    c_a, c_p, s = comb(k, t_a), comb(k, t - t_a), comb(k, t)
+    ia, ip = cs.split_tables(k, t, t_a)
+    ia, ip = jnp.asarray(ia), jnp.asarray(ip)
+    length = ia.shape[1]
+    rng = np.random.default_rng(2)
+    m_a32 = jnp.asarray(rng.random((batch, c_a, g.n), np.float32))
+    m_p32 = jnp.asarray(rng.random((batch, c_p, g.n), np.float32))
+    flops = spmm_ema_flops(batch, g.m, g.n, c_p, s, length)
+    s_pad = -(-s // 8) * 8
+    out = {}
+    for dt in (jnp.float32, jnp.bfloat16):
+        dname = np.dtype(dt).name
+        prep = fused_ops.prepare_fused(g, interpret=True, dtype=dt)
+        m_a, m_p = m_a32.astype(dt), m_p32.astype(dt)
+        fn = jax.jit(
+            lambda a, p, prep=prep: fused_ops.fused_spmm_ema(
+                a, p, ia, ip, prep))
+        sec = timeit(fn, m_a, m_p, iters=reps)
+        item = jnp.dtype(dt).itemsize
+        acc_item = jnp.dtype(ema_ops.accum_dtype(dt)).itemsize
+        adj_bytes = int(np.asarray(prep.arrays["blocks"]).nbytes)
+        bb = pick_batch_block(batch, c_a, c_p, s_pad, length, 128, acc_item)
+        hbm = spmm_ema_hbm_bytes(batch, g.n, c_a, c_p, s, adj_bytes, item,
+                                 fused=True, adj_passes=-(-batch // bb))
+        r = KernelRoofline(name=f"fused/{dname}", flops=flops,
+                           hbm_bytes=hbm, seconds=sec,
+                           peak_flops=peak_flops, peak_bw=peak_bw)
+        out[dname] = r.as_dict()
+        emit(f"roofline/{r.name}", sec * 1e6,
+             f"{r.achieved_bw / 1e9:.2f}GB/s|OI={r.oi:.2f}|{r.bound}")
+    out["speedup"] = out["float32"]["seconds"] / out["bfloat16"]["seconds"]
+    out["workload_bw_gain"] = out["speedup"]
+    # engine-level count accuracy: bf16 storage vs the f32 reference
+    e32 = build_engine(g, "u5", "pgbsc")
+    e16 = build_engine(g, "u5", "pgbsc", dtype=jnp.bfloat16,
+                       fuse_spmm_ema=True)
+    colors = coloring_numpy(0, 0, g.n, 5)
+    want = float(e32.count_colorful(colors)[0])
+    got = float(e16.count_colorful(colors)[0])
+    out["count_rel_err"] = abs(got - want) / max(abs(want), 1.0)
+    emit("roofline/fused/bf16_gain", 0.0,
+         f"x{out['workload_bw_gain']:.2f}|relerr="
+         f"{out['count_rel_err']:.1e}")
+    return out
+
+
+def _shared_bundle() -> tuple:
+    """Two k=5 trees whose dedup plan shares a path2 passive between T1's
+    root and an interior node of T2 (see tests/test_kernels_fused.py)."""
+    return (TreeTemplate([(0, 1), (1, 2), (0, 3), (0, 4)], root=0,
+                         name="sharedp_a"),
+            TreeTemplate([(0, 1), (1, 2), (2, 3), (1, 4)], root=0,
+                         name="sharedp_b"))
+
+
+def _shared_section(g, *, batch: int, reps: int) -> dict:
+    """Shared-passive group launch vs per-consumer fused launches."""
+    shared = build_engine(g, _shared_bundle(), "pgbsc", plan="dedup",
+                          fuse_spmm_ema=True)
+    assert shared.schedule.fused_groups, "bundle must form a group"
+    grp = shared.schedule.fused_groups[0]
+    k = shared.k
+    c_p = comb(k, shared.plan.nodes[shared.plan.nodes[grp[0]].passive].size)
+    cols_grouped = shared.spmm_cols_per_coloring
+    cols_per_consumer = cols_grouped + (len(grp) - 1) * c_p
+    rng = np.random.default_rng(3)
+    fprep = fused_ops.prepare_fused(g, interpret=True)
+    m_p = jnp.asarray(rng.random((batch, c_p, g.n), np.float32))
+    m_as, ias, ips = [], [], []
+    for m in grp:
+        node = shared.plan.nodes[m]
+        t, t_a = node.size, shared.plan.nodes[node.active].size
+        ia, ip = cs.split_tables(k, t, t_a)
+        ias.append(jnp.asarray(ia))
+        ips.append(jnp.asarray(ip))
+        m_as.append(jnp.asarray(
+            rng.random((batch, comb(k, t_a), g.n), np.float32)))
+
+    def one_launch(mas, mp):
+        return fused_ops.fused_spmm_ema_shared(mas, mp, ias, ips, fprep)
+
+    def per_consumer(mas, mp):
+        return tuple(fused_ops.fused_spmm_ema(ma, mp, ia, ip, fprep)
+                     for ma, ia, ip in zip(mas, ias, ips))
+
+    sec_s = timeit(jax.jit(one_launch), m_as, m_p, iters=reps)
+    sec_p = timeit(jax.jit(per_consumer), m_as, m_p, iters=reps)
+    emit("roofline/shared_passive", sec_s * 1e6,
+         f"cols={cols_grouped}(vs {cols_per_consumer})"
+         f"|x{sec_p / sec_s:.2f}")
+    return {"group": list(grp), "consumers": len(grp),
+            "spmm_cols_grouped": cols_grouped,
+            "spmm_cols_per_consumer_fusion": cols_per_consumer,
+            "shared_seconds": sec_s, "per_consumer_seconds": sec_p,
+            "speedup": sec_p / sec_s}
+
+
 def run(smoke: bool = False, out_path: pathlib.Path | None = None) -> dict:
     peak_flops, peak_bw = peaks = _host_peaks()
     emit("fig11/host_peak", 0.0,
@@ -197,6 +339,9 @@ def run(smoke: bool = False, out_path: pathlib.Path | None = None) -> dict:
         result["templates"][name] = _kernel_section(
             g, name, peaks, batch=batch, reps=reps)
         result["templates"][name]["admission"] = _admission_section(g, name)
+    result["reorder"] = _reorder_section(g)
+    result["dtype"] = _dtype_section(g, peaks, batch=batch, reps=reps)
+    result["shared_passive"] = _shared_section(g, batch=batch, reps=reps)
     out_path = pathlib.Path(out_path) if out_path else DEFAULT_OUT
     out_path.write_text(json.dumps(result, indent=2) + "\n")
     emit("roofline/json", 0.0, str(out_path))

@@ -164,6 +164,13 @@ def spmm_ema_hbm_bytes(b: int, n: int, c_a: int, c_p: int, s: int,
     exactly the traffic the fused kernel keeps in VMEM. The adjacency
     stream is charged ``adj_passes`` times (the fused kernel re-streams it
     once per batch block).
+
+    ``itemsize`` is the *storage* dtype width: with
+    ``compute_dtype=bfloat16`` the tables and adjacency values stream at
+    2 bytes each while accumulation stays float32 in VMEM — halving this
+    model's byte count without touching the FLOP count, which is how the
+    bf16 rows in BENCH_roofline.json gain modeled bandwidth. Pass the
+    bf16 itemsize through ``adj_bytes`` too (blocks are stored narrow).
     """
     tables = b * n * (c_a + c_p + s)
     if not fused:

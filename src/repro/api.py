@@ -58,7 +58,9 @@ class CountQuery:
     :class:`~repro.service.requests.CountRequest` (``rel_stderr`` adaptive
     target and/or ``max_iters`` cap, ``min_iters`` early-stop guard);
     ``memory_budget_bytes`` bounds each fused engine's device tables via
-    the executor's memory model."""
+    the executor's memory model; ``reorder`` ("rcm" or "degree") permutes
+    the graph once per engine for BSR locality, with results mapped back to
+    the caller's vertex ids at the boundary."""
 
     templates: tuple[TemplateSpec, ...]
     rel_stderr: float | None = None
@@ -70,6 +72,7 @@ class CountQuery:
     round_size: int = 8
     memory_budget_bytes: int | None = None
     batch_size: int | None = None
+    reorder: str | None = None
 
     def __post_init__(self):
         tpls = self.templates
@@ -114,6 +117,8 @@ class CompiledQuery:
         kw = {}
         if query.memory_budget_bytes is not None:
             kw["memory_budget_bytes"] = int(query.memory_budget_bytes)
+        if query.reorder:
+            kw["reorder"] = query.reorder
         self.groups: list[tuple[list[int], CountingEngine]] = []
         for k in sorted(by_k):
             idxs = by_k[k]
@@ -187,7 +192,7 @@ def count_many(g, templates, *, rel_stderr: float | None = None,
                max_iters: int | None = None, min_iters: int = 4,
                seed: int = 0, engine: str = "pgbsc", plan: str = "optimized",
                round_size: int = 8, memory_budget_bytes: int | None = None,
-               batch_size: int | None = None,
+               batch_size: int | None = None, reorder: str | None = None,
                engine_cache=None) -> list[RequestResult]:
     """Estimate counts for N templates with cross-template subplan sharing.
 
@@ -207,7 +212,8 @@ def count_many(g, templates, *, rel_stderr: float | None = None,
         templates=tuple(templates), rel_stderr=rel_stderr,
         max_iters=max_iters, min_iters=min_iters, seed=seed, engine=engine,
         plan=plan, round_size=round_size,
-        memory_budget_bytes=memory_budget_bytes, batch_size=batch_size)
+        memory_budget_bytes=memory_budget_bytes, batch_size=batch_size,
+        reorder=reorder)
     return compile_query(g, query, engine_cache=engine_cache).run()
 
 

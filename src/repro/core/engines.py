@@ -39,6 +39,7 @@ from repro.core import colorsets as cs
 from repro.core import executor as pexec
 from repro.core.templates import (ExecutionPlan, as_template,
                                   compile_fused_plan)
+from repro.graph.reorder import ORDERINGS, apply_order, inverse_order
 from repro.graph.structure import Graph
 from repro.kernels.ema import ops as ema_ops
 from repro.kernels.fused import ops as fused_ops
@@ -140,9 +141,13 @@ class CountingEngine:
                  batch_size: int | None = None,
                  memory_budget_bytes: int | None = None,
                  fuse_spmm_ema: bool = False,
-                 autotune_blocks: bool = False):
+                 autotune_blocks: bool = False,
+                 reorder: str | None = None):
         if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine!r}")
+        if reorder not in (None, "", *ORDERINGS):
+            raise ValueError(f"unknown reorder {reorder!r}; "
+                             f"choose from {sorted(ORDERINGS)} or None")
         if isinstance(template, (list, tuple)):
             if not template:
                 raise ValueError("engine needs at least one template")
@@ -154,6 +159,27 @@ class CountingEngine:
             raise ValueError(
                 f"one engine fuses equal-k templates only, got k={ks}; "
                 "group by k first (repro.api.count_many does)")
+        # Vertex reordering: permute the graph ONCE here; the entire plan
+        # walk runs in the permuted vertex space, and only the engine
+        # boundary permutes (colorings in, root tables out) — see
+        # _wrap_reorder. Block-count/density before vs after are published
+        # as gauges so the locality win is observable per graph.
+        self.reorder = reorder or None
+        self.g_orig = g
+        if self.reorder:
+            before = g.bsr_block_stats()
+            self._order = ORDERINGS[self.reorder](g)
+            g = apply_order(g, self._order)
+            after = g.bsr_block_stats()
+            for stage, stats in (("before", before), ("after", after)):
+                _metrics.gauge("reorder_bsr_occupied_blocks",
+                               reorder=self.reorder, stage=stage
+                               ).set(stats["occupied_blocks"])
+                _metrics.gauge("reorder_bsr_block_density",
+                               reorder=self.reorder, stage=stage
+                               ).set(stats["block_density"])
+        else:
+            self._order = None
         self.g = g
         self.templates = templates
         self.template = templates[0]
@@ -184,10 +210,11 @@ class CountingEngine:
         self.interpret = interpret
         self.autotune_blocks = autotune_blocks
         self.fuse_spmm_ema = bool(fuse_spmm_ema and engine == "pgbsc")
-        # per-node fusion decisions (idx -> "admitted" | rejection reason);
-        # empty when fusion was not requested
+        # per-node fusion decisions (idx -> "admitted" | "admitted_shared" |
+        # rejection reason); empty when fusion was not requested
         self.fusion_report: dict[int, str] = {}
-        fused_nodes = self._fused_candidates() if self.fuse_spmm_ema else ()
+        fused_nodes, fused_groups = (self._fused_candidates()
+                                     if self.fuse_spmm_ema else ((), ()))
 
         # budget -> (derived batch size, liveness schedule, chunking); an
         # explicit batch_size only overrides the batch, not the schedule.
@@ -198,7 +225,7 @@ class CountingEngine:
             memory_budget_bytes=memory_budget_bytes, dtype=dtype,
             passive_cache=(engine != "fascia"),
             allow_chunking=(engine == "pgbsc"), keep=keep,
-            fused=fused_nodes)
+            fused=fused_nodes, fused_groups=fused_groups)
         self.schedule = self.exec_choice.schedule
         self.batch_size = int(batch_size if batch_size is not None
                               else self.exec_choice.batch_size)
@@ -214,52 +241,120 @@ class CountingEngine:
         self.n_colorings_dispatched = 0
         self.n_spmm_cols_dispatched = 0
 
-    def _fused_candidates(self) -> tuple[int, ...]:
-        """Plan nodes eligible for the fused SpMM->eMA kernel.
+    def _fused_candidates(self) -> tuple[tuple[int, ...],
+                                         tuple[tuple[int, ...], ...]]:
+        """Plan nodes eligible for the fused SpMM->eMA kernel, plus the
+        shared-passive groups among them — returns ``(fused, groups)``.
 
-        A node is fused when (a) it is the ONLY consumer of its passive
-        child's neighbor sums — fusing a shared passive would recompute the
-        SpMM per consumer, forfeiting the y-cache/fused-plan dedup win — and
-        (b) its resident tables fit one VMEM grid step, and (c) the table
-        dtype runs on the kernel path in this mode (otherwise the explicit
-        XLA fallback would materialize y and the memory model would lie).
+        A sole consumer of its passive child fuses alone when (a) its
+        resident tables fit one VMEM grid step and (b) the table dtype runs
+        on the kernel path in this mode (otherwise the explicit XLA fallback
+        would materialize y and the memory model would lie).
+
+        Consumers SHARING a passive child fuse as a group: one launch whose
+        SpMM leg runs once into shared VMEM scratch (the y-cache's dedup win
+        without the HBM round-trip). A group is admitted only when it covers
+        the passive's ENTIRE consumer set — partial groups would re-run the
+        SpMM for the leftovers, regressing the once-per-child column count
+        the y-cache guarantees — and only when it can actually run as one
+        launch: no member's active child is itself a member (the launch
+        cannot consume its own outputs), every member fits a singleton grid
+        step, the combined working set passes the group VMEM fit, and the
+        members can be made consecutive in program order (no outside
+        consumer of a member sits at or before the latest member). The
+        chain-shaped consumer sets of path-like templates fail the
+        intra-dependency test by construction and stay on the y-cache; the
+        win case is template ROOTS sharing a canonical passive sub-template
+        (they have no consumers at all).
 
         Every decision lands in :attr:`fusion_report` (``{plan node idx:
-        "admitted" | rejection reason}``) and in the reason-labeled
-        ``fusion_admissions_total`` counters, so a user asking for fusion
-        can see exactly which nodes got it and why the rest did not.
+        "admitted" | "admitted_shared" | rejection reason}``) and in the
+        reason-labeled ``fusion_admissions_total`` counters, so a user
+        asking for fusion can see exactly which nodes got it and why the
+        rest did not.
         """
         dtype_ok = ema_ops.pallas_supports_dtype(self.dtype, self.interpret)
-        uses: dict[int, int] = {}
-        for node in self.plan.nodes:
-            if not node.is_leaf:
-                uses[node.passive] = uses.get(node.passive, 0) + 1
-        out = []
+        consumers: dict[int, list[int]] = {}
+        cons_any: dict[int, list[int]] = {}
+        for idx, node in enumerate(self.plan.nodes):
+            if node.is_leaf:
+                continue
+            consumers.setdefault(node.passive, []).append(idx)
+            cons_any.setdefault(node.active, []).append(idx)
+            cons_any.setdefault(node.passive, []).append(idx)
+
+        def dims(idx: int) -> tuple[int, int, int, int]:
+            node = self.plan.nodes[idx]
+            t = node.size
+            t_a = self.plan.nodes[node.active].size
+            return (comb(self.k, t_a), comb(self.k, t - t_a),
+                    comb(self.k, t), comb(t, t_a))
+
+        def solo_fits(idx: int) -> bool:
+            c_a, c_p, s, l = dims(idx)
+            return fused_ops.fused_fits_vmem(c_a, c_p, s, l=l,
+                                             dtype=self.dtype)
+
+        def group_fits(members: list[int]) -> bool:
+            c_p = dims(members[0])[1]
+            c_as = [dims(m)[0] for m in members]
+            ss = [dims(m)[2] for m in members]
+            ls = [dims(m)[3] for m in members]
+            return fused_ops.fused_group_fits_vmem(c_as, c_p, ss, ls,
+                                                   dtype=self.dtype)
+
+        def order_ok(members: list[int]) -> bool:
+            # regrouping moves members to the LAST member's slot; any
+            # outside consumer of a member scheduled at or before that slot
+            # would then precede its producer
+            anchor = max(members)
+            mset = set(members)
+            return all(c > anchor or c in mset
+                       for m in members for c in cons_any.get(m, []))
+
+        out: list[int] = []
+        groups: list[tuple[int, ...]] = []
         for idx, node in enumerate(self.plan.nodes):
             if node.is_leaf:
                 continue
             if not dtype_ok:
                 self.fusion_report[idx] = "dtype_unsupported"
-            elif uses[node.passive] != 1:
-                self.fusion_report[idx] = "multi_consumer"
-            else:
-                t = node.size
-                t_a = self.plan.nodes[node.active].size
-                if fused_ops.fused_fits_vmem(
-                        comb(self.k, t_a), comb(self.k, t - t_a),
-                        comb(self.k, t), l=comb(t, t_a), dtype=self.dtype):
+            elif len(consumers[node.passive]) == 1:
+                if solo_fits(idx):
                     self.fusion_report[idx] = "admitted"
                     out.append(idx)
                 else:
                     self.fusion_report[idx] = "vmem_overflow"
+            else:
+                # default for shared-passive consumers; members of an
+                # accepted group are upgraded to "admitted_shared" below
+                self.fusion_report[idx] = "multi_consumer"
+        if dtype_ok:
+            for p, cons in sorted(consumers.items()):
+                if len(cons) < 2:
+                    continue
+                mset = set(cons)
+                if (all(solo_fits(i) for i in cons)
+                        and not any(self.plan.nodes[m].active in mset
+                                    for m in cons)
+                        and group_fits(cons)
+                        and order_ok(cons)):
+                    grp = tuple(sorted(cons))
+                    groups.append(grp)
+                    for m in grp:
+                        self.fusion_report[m] = "admitted_shared"
+                        out.append(m)
         for idx, verdict in self.fusion_report.items():
             if verdict == "admitted":
                 _metrics.counter("fusion_admissions_total",
                                  outcome="admitted").inc()
+            elif verdict == "admitted_shared":
+                _metrics.counter("fusion_admissions_total",
+                                 outcome="admitted", mode="shared").inc()
             else:
                 _metrics.counter("fusion_admissions_total",
                                  outcome="rejected", reason=verdict).inc()
-        return tuple(out)
+        return tuple(sorted(out)), tuple(groups)
 
     # -------------------------------------------------------- device state
     def _materialize(self) -> None:
@@ -270,12 +365,22 @@ class CountingEngine:
 
     def _materialize_inner(self) -> None:
         g = self.g
+        if self._order is not None:
+            # device copies of the boundary permutation (order: coloring in,
+            # inv: root table out); rebuilt after release() like every prep
+            self._order_dev = jnp.asarray(self._order, jnp.int32)
+            self._inv_dev = jnp.asarray(inverse_order(self._order), jnp.int32)
+        else:
+            self._order_dev = self._inv_dev = None
         if self.engine == "pgbsc":
-            self._spmm_prep = spmm_ops.prepare(g, self.spmm_method,
-                                               interpret=self.interpret)
+            self._spmm_prep = spmm_ops.prepare(
+                g, self.spmm_method, interpret=self.interpret,
+                dtype=self.dtype, reorder=self.reorder or "")
             self._nbr = self._mask = None
             self._fused_prep = (
-                fused_ops.prepare_fused(g, interpret=self.interpret)
+                fused_ops.prepare_fused(g, interpret=self.interpret,
+                                        dtype=self.dtype,
+                                        reorder=self.reorder or "")
                 if self.schedule.fused else None)
         else:
             nbr, mask = g.ell()
@@ -365,6 +470,7 @@ class CountingEngine:
         self._spmm_prep = None
         self._fused_prep = None
         self._nbr = self._mask = None
+        self._order_dev = self._inv_dev = None
         self._splits = {}
         self._chunk_packs = {}
         self._released = True
@@ -408,8 +514,10 @@ class CountingEngine:
                              f"{colorings.shape}")
         b = colorings.shape[0]
         if b == 0:
+            # totals come out of the accumulator-dtype reduction, so the
+            # empty case must match (f32 for bf16 storage)
             empty = jnp.zeros((0, len(self.templates)) if self.fused
-                              else (0,), self.dtype)
+                              else (0,), ema_ops.accum_dtype(self.dtype))
             return empty, (() if self.fused else empty)
         # clamped to b: steady-state short calls (e.g. a runner checkpointing
         # every 4 with knob 16) must not pay 4x padded compute; the cost is
@@ -546,10 +654,37 @@ class CountingEngine:
         return results
 
     # ------------------------------------------------------------- builders
+    def _wrap_reorder(self, fn: Callable) -> Callable:
+        """Boundary permutation around a built count program: colorings are
+        permuted INTO the engine's reordered vertex space on the way in and
+        the root tables are inverse-permuted back to the caller's original
+        vertex ids on the way out. Totals are sums over the whole table, so
+        they need nothing (permutation-invariant up to float reassociation).
+        """
+        if self._order is None:
+            return fn
+        order_dev, inv_dev = self._order_dev, self._inv_dev
+        # pgbsc tables are combination-major (..., C, N); fascia/pfascia are
+        # row-major (..., N, C) — the vertex axis moves accordingly
+        vaxis = -1 if self.engine == "pgbsc" else -2
+        is_fused = self.fused
+
+        def wrapped(colors: jax.Array):
+            totals, roots = fn(jnp.take(colors, order_dev, axis=-1))
+            if is_fused:
+                roots = tuple(jnp.take(r, inv_dev, axis=vaxis)
+                              for r in roots)
+            else:
+                roots = jnp.take(roots, inv_dev, axis=vaxis)
+            return totals, roots
+
+        return wrapped
+
     def _build(self) -> Callable:
         if self.engine == "pgbsc":
-            return self._build_pgbsc()
-        return self._build_rowmajor(pruned=self.engine == "pfascia")
+            return self._wrap_reorder(self._build_pgbsc())
+        return self._wrap_reorder(
+            self._build_rowmajor(pruned=self.engine == "pfascia"))
 
     def _build_batch(self) -> Callable:
         """(B, n) colorings -> (totals (B,), root tables (B, ...)).
@@ -559,8 +694,9 @@ class CountingEngine:
         single-coloring program over the batch dimension.
         """
         if self.engine == "pgbsc":
-            return self._build_pgbsc()
-        return jax.vmap(self._build_rowmajor(pruned=self.engine == "pfascia"))
+            return self._wrap_reorder(self._build_pgbsc())
+        return self._wrap_reorder(
+            jax.vmap(self._build_rowmajor(pruned=self.engine == "pfascia")))
 
     def _leaf_table_cn(self, colors: jax.Array) -> jnp.ndarray:
         """(..., k, N) one-hot of vertex colors — combination-major leaves.
@@ -602,20 +738,35 @@ class CountingEngine:
             ia, ip = splits[idx]
             return fused_ops.fused_spmm_ema(m_a, m_p, ia, ip, fprep)
 
+        def combine_group(members, m_as, m_p):
+            # shared-passive group: ONE launch computes the passive child's
+            # neighbor sums once in VMEM scratch and applies every member's
+            # split combination against it
+            ias = tuple(splits[m][0] for m in members)
+            ips = tuple(splits[m][1] for m in members)
+            return fused_ops.fused_spmm_ema_shared(m_as, m_p, ias, ips,
+                                                   fprep)
+
+        # sub-f32 storage sums its root tables in the accumulator dtype
+        # (f32 for bf16) — the final reduction must not halve its mantissa
+        acc_dt = ema_ops.accum_dtype(self.dtype)
+
         def run(colors: jax.Array):
             # colors: (N,) or batched (B, N) — every step below is
             # polymorphic over the leading batch dimension.
             leaf = self._leaf_table_cn(colors)
             outs = runner.run(leaf, passive_op=passive_op, combine=combine,
                               combine_direct=combine_direct,
+                              combine_group=combine_group,
                               on_step=self._peak_probe,
                               outputs=self.roots)
             if not self.fused:
                 root = outs[0]
-                return root.sum(axis=(-2, -1)), root
+                return root.astype(acc_dt).sum(axis=(-2, -1)), root
             # one fused walk, one (..., T) totals vector — template j's
             # entry comes from its own root table
-            totals = jnp.stack([r.sum(axis=(-2, -1)) for r in outs], axis=-1)
+            totals = jnp.stack(
+                [r.astype(acc_dt).sum(axis=(-2, -1)) for r in outs], axis=-1)
             return totals, outs
 
         return run
@@ -626,15 +777,20 @@ class CountingEngine:
         nbr, mask = self._nbr, self._mask
         runner = pexec.PlanExecutor(self.plan, self.schedule)
 
+        acc_dt = ema_ops.accum_dtype(self.dtype)
+
         def nbr_sum(m_cols: jnp.ndarray) -> jnp.ndarray:
             # m_cols: (N, R) -> out[i, r] = sum_d m_cols[nbr[i, d], r] * mask
+            # Accumulate in acc_dt (f32 for bf16 tables) and downcast once at
+            # the end — the scan carry must keep one dtype throughout.
             def body(acc, nd):
                 col_ids, msk = nd
-                return acc + m_cols[col_ids, :] * msk[:, None], None
+                gathered = m_cols[col_ids, :].astype(acc_dt)
+                return acc + gathered * msk.astype(acc_dt)[:, None], None
 
-            acc0 = jnp.zeros_like(m_cols)
+            acc0 = jnp.zeros(m_cols.shape, acc_dt)
             acc, _ = jax.lax.scan(body, acc0, (nbr.T, mask.T))
-            return acc
+            return acc.astype(m_cols.dtype)
 
         def passive_op(p_idx, m_p):
             # PFASCIA: one neighbor sweep per distinct passive set.
@@ -645,11 +801,13 @@ class CountingEngine:
 
             def body(acc, idx_l):
                 ia_l, ip_l = idx_l
-                return acc + m_a[:, ia_l] * y_p[:, ip_l], None
+                prod = (m_a[:, ia_l].astype(acc_dt)
+                        * y_p[:, ip_l].astype(acc_dt))
+                return acc + prod, None
 
-            acc0 = jnp.zeros((m_a.shape[0], ia.shape[0]), self.dtype)
+            acc0 = jnp.zeros((m_a.shape[0], ia.shape[0]), acc_dt)
             acc, _ = jax.lax.scan(body, acc0, (ia.T, ip.T))
-            return acc
+            return acc.astype(self.dtype)
 
         def combine_direct(idx, m_a, m_p):
             # FASCIA: the neighbor sweep is *inside* the split loop —
@@ -657,13 +815,13 @@ class CountingEngine:
             ia, ip = splits[idx]
 
             def body(acc, idx_l):
-                ia_l, ip_l = idx_l
-                y_l = nbr_sum(m_p[:, ip_l])   # (N, S) sweep per split
-                return acc + m_a[:, ia_l] * y_l, None
+                y_l = nbr_sum(m_p[:, idx_l[1]])   # (N, S) sweep per split
+                prod = m_a[:, idx_l[0]].astype(acc_dt) * y_l.astype(acc_dt)
+                return acc + prod, None
 
-            acc0 = jnp.zeros((m_a.shape[0], ia.shape[0]), self.dtype)
+            acc0 = jnp.zeros((m_a.shape[0], ia.shape[0]), acc_dt)
             acc, _ = jax.lax.scan(body, acc0, (ia.T, ip.T))
-            return acc
+            return acc.astype(self.dtype)
 
         def run(colors: jax.Array):
             leaf = self._leaf_table_cn(colors).T  # (N, k)
@@ -675,8 +833,8 @@ class CountingEngine:
                 outputs=self.roots)
             if not self.fused:
                 root = outs[0]
-                return root.sum(), root
-            totals = jnp.stack([r.sum() for r in outs])
+                return root.astype(acc_dt).sum(), root
+            totals = jnp.stack([r.astype(acc_dt).sum() for r in outs])
             return totals, outs
 
         return run
@@ -697,14 +855,18 @@ class CountingEngine:
         ``pgbsc``/``pfascia`` pay ``C(k, t_p)`` columns once per *distinct*
         passive child (the executor's y-cache), which is where fused plans
         win: a passive sub-template shared across templates is one SpMM for
-        the whole bundle. Colorset-chunked nodes bypass the cache and pay
-        per consumer; ``fascia`` recomputes the sweep inside the split loop
-        (``C(k, t)`` columns per split, paper §3.1).
+        the whole bundle. A shared-passive fused GROUP keeps that once-per-
+        child cost — its single launch runs the SpMM leg once for every
+        member. Singleton-fused and colorset-chunked nodes bypass the cache
+        and pay per consumer; ``fascia`` recomputes the sweep inside the
+        split loop (``C(k, t)`` columns per split, paper §3.1).
         """
         cols = 0
         seen: set[int] = set()
+        counted_groups: set[tuple[int, ...]] = set()
         chunk_map = self.schedule.chunk_map
         fused_set = self.schedule.fused_set
+        group_of = self.schedule.group_of
         for idx, node in enumerate(self.plan.nodes):
             if node.is_leaf:
                 continue
@@ -712,6 +874,11 @@ class CountingEngine:
             t_a = self.plan.nodes[node.active].size
             if self.engine == "fascia":
                 cols += comb(self.k, t) * comb(t, t_a)
+            elif idx in group_of and chunk_map.get(idx, 1) <= 1:
+                grp = group_of[idx]
+                if grp not in counted_groups:
+                    counted_groups.add(grp)
+                    cols += comb(self.k, t - t_a)
             elif chunk_map.get(idx, 1) > 1 or idx in fused_set:
                 cols += comb(self.k, t - t_a)
             elif node.passive not in seen:

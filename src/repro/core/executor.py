@@ -79,6 +79,13 @@ class Schedule:
         Fused nodes bypass the y-cache; a node listed in both ``chunks`` and
         ``fused`` is treated as chunked (chunking wins, it exists because
         even the fused footprint exceeded budget).
+    ``fused_groups``
+        Disjoint tuples of ``fused`` nodes sharing ONE passive child that
+        run as a single shared-passive launch: the members sit consecutively
+        in ``order`` and all their tables materialize at the group's first
+        member's step (the leader), with the SpMM leg paid once for the
+        whole group. Every group member must also be listed in ``fused``
+        (liveness treats members as direct passive consumers either way).
     ``passive_cache``
         Whether the walk materializes/caches the passive transform
         (SpMM / hoisted neighbor sum). False for FASCIA, whose neighbor
@@ -96,6 +103,7 @@ class Schedule:
     passive_cache: bool = True
     keep: tuple[int, ...] = ()
     fused: tuple[int, ...] = ()
+    fused_groups: tuple[tuple[int, ...], ...] = ()
 
     @property
     def chunk_map(self) -> dict[int, int]:
@@ -104,6 +112,11 @@ class Schedule:
     @property
     def fused_set(self) -> frozenset[int]:
         return frozenset(self.fused)
+
+    @property
+    def group_of(self) -> dict[int, tuple[int, ...]]:
+        """Member node index -> its shared-passive group tuple."""
+        return {m: grp for grp in self.fused_groups for m in grp}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,6 +146,29 @@ def _validate_order(plan, order) -> dict[int, int]:
             if pos[node.active] >= pos[idx] or pos[node.passive] >= pos[idx]:
                 raise ValueError(f"order is not topological at node {idx}")
     return pos
+
+
+def _regroup_order(order, groups):
+    """Move each group's members so they sit consecutively at the position
+    of the group's LATEST member (ascending by original position). Children
+    of the moved members and consumers of any member can be violated by the
+    move — the caller re-validates with :func:`_validate_order` and drops
+    groups whose regrouped order is not topological.
+    """
+    pos = {i: s for s, i in enumerate(order)}
+    anchor_of: dict[int, tuple[int, ...]] = {}
+    member: set[int] = set()
+    for grp in groups:
+        anchor = max(grp, key=lambda i: pos[i])
+        anchor_of[anchor] = tuple(sorted(grp, key=lambda i: pos[i]))
+        member.update(grp)
+    out: list[int] = []
+    for i in order:
+        if i in anchor_of:
+            out.extend(anchor_of[i])
+        elif i not in member:
+            out.append(i)
+    return tuple(out)
 
 
 def liveness(plan, order, *, passive_cache: bool = True,
@@ -190,11 +226,14 @@ def liveness(plan, order, *, passive_cache: bool = True,
 def _step_peaks(plan, k: int, order, free_tables, free_y, *,
                 passive_cache: bool, chunks: dict[int, int],
                 fused: frozenset[int] = frozenset(),
+                fused_groups: tuple[tuple[int, ...], ...] = (),
                 pair_block: int = PAIR_BLOCK) -> list[int]:
     """Modeled live table rows at each step of the walk (working buffers
     included). Mirrors :meth:`PlanExecutor.run` exactly, including the
-    mid-step release of a passive table right after its y entry is built."""
+    mid-step release of a passive table right after its y entry is built
+    and the all-members-at-once materialization of shared-passive groups."""
     rows = [comb(k, nd.size) for nd in plan.nodes]
+    group_of = {m: grp for grp in fused_groups for m in grp}
     leaf_idxs = [i for i, nd in enumerate(plan.nodes) if nd.is_leaf]
     free_step: dict[int, int] = {}
     for s, fr in enumerate(free_tables):
@@ -226,6 +265,16 @@ def _step_peaks(plan, k: int, order, free_tables, free_y, *,
                 # one passive chunk, one pair-block term buffer, the output
                 chunk_r = -(-rows[node.passive] // q)
                 peaks.append(cur() + chunk_r + pair_block + out_r)
+            elif idx in group_of:
+                # shared-passive group: every member's table materializes at
+                # the leader step (one launch); later member steps add nothing
+                grp = group_of[idx]
+                if idx not in live_t and not any(m in live_t for m in grp):
+                    peaks.append(cur() + sum(rows[m] for m in grp))
+                    for m in grp:
+                        live_t[m] = rows[m]
+                else:
+                    peaks.append(cur())
             elif idx in fused:
                 # fused SpMM->eMA kernel: the neighbor-sum table lives only
                 # in VMEM scratch — no HBM rows beyond the output table
@@ -263,6 +312,7 @@ def simulate_peak_rows(plan, k: int, schedule: Schedule,
     peaks = _step_peaks(plan, k, schedule.order, schedule.free_tables,
                         schedule.free_y, passive_cache=schedule.passive_cache,
                         chunks=schedule.chunk_map, fused=schedule.fused_set,
+                        fused_groups=schedule.fused_groups,
                         pair_block=pair_block)
     return max(peaks) if peaks else 0
 
@@ -417,7 +467,9 @@ def compute_schedule(plan, k: int | None = None, *,
                      chunks: dict[int, int] | None = None,
                      order_mode: str = "auto",
                      keep: tuple[int, ...] = (),
-                     fused: tuple[int, ...] = ()) -> Schedule:
+                     fused: tuple[int, ...] = (),
+                     fused_groups: tuple[tuple[int, ...], ...] = ()
+                     ) -> Schedule:
     """Build a :class:`Schedule` for ``plan``.
 
     ``order_mode``: ``"program"`` keeps the plan's own post-order;
@@ -426,6 +478,13 @@ def compute_schedule(plan, k: int | None = None, *,
     ``keep`` lists extra output nodes never to free (fused-plan roots);
     ``fused`` lists nodes running the fused SpMM->eMA kernel (their
     neighbor-sum table never reaches HBM — see :class:`Schedule`).
+    ``fused_groups`` lists shared-passive groups over ``fused`` nodes: each
+    candidate order is regrouped so members run consecutively (one launch);
+    a group whose regrouped order stops being topological — some member's
+    consumer sits between the members — is dropped for that candidate, and
+    its members leave ``fused`` entirely (back to the y-cache path, which
+    still pays the shared SpMM once; singleton-fusing them would pay it per
+    consumer).
     """
     k = k or plan.k
     cmap = dict(chunks or {})
@@ -444,12 +503,30 @@ def compute_schedule(plan, k: int | None = None, *,
     best: Schedule | None = None
     best_peak: int | None = None
     for order in candidates:
+        accepted: list[tuple[int, ...]] = []
+        for grp in fused_groups:
+            gset = set(grp)
+            if any(plan.nodes[m].active in gset or plan.nodes[m].passive
+                   in gset for m in grp):
+                # a single launch cannot consume its own outputs
+                continue
+            trial = _regroup_order(order, accepted + [tuple(grp)])
+            try:
+                _validate_order(plan, trial)
+            except ValueError:
+                continue
+            accepted.append(tuple(grp))
+        if accepted:
+            order = _regroup_order(order, accepted)
+        kept_members = {m for grp in accepted for m in grp}
+        dropped = {m for grp in fused_groups for m in grp} - kept_members
+        fused_c = tuple(i for i in fused if i not in dropped)
         ft, fy = liveness(plan, order, passive_cache=passive_cache,
-                          chunks=cmap, keep=keep, fused=fused)
+                          chunks=cmap, keep=keep, fused=fused_c)
         sched = Schedule(order=order, free_tables=ft, free_y=fy,
                          chunks=tuple(sorted(cmap.items())),
                          passive_cache=passive_cache, keep=keep,
-                         fused=fused)
+                         fused=fused_c, fused_groups=tuple(accepted))
         peak = simulate_peak_rows(plan, k, sched)
         if best_peak is None or peak < best_peak:
             best, best_peak = sched, peak
@@ -465,7 +542,9 @@ def pick_execution(plan, k: int, n: int, *,
                    passive_cache: bool = True,
                    allow_chunking: bool = True,
                    keep: tuple[int, ...] = (),
-                   fused: tuple[int, ...] = ()) -> ExecutionChoice:
+                   fused: tuple[int, ...] = (),
+                   fused_groups: tuple[tuple[int, ...], ...] = ()
+                   ) -> ExecutionChoice:
     """Turn one ``memory_budget_bytes`` knob into (batch size, schedule).
 
     The batch is the largest B with ``B * peak(batch=1) <= budget`` (capped
@@ -476,20 +555,30 @@ def pick_execution(plan, k: int, n: int, *,
     realizing the current peak — until the modeled peak fits or every
     chunkable node is at single-row chunks (the irreducible floor of
     active + passive + output tables; the choice is then best-effort with
-    ``fits=False``).
+    ``fits=False``). Shared-passive ``fused_groups`` survive only on the
+    unchunked path: once chunking starts, groups are dropped (their members
+    stay singleton-fused) — a group step materializes every member's output
+    at once, the opposite of what a budget squeeze wants.
     """
     budget = memory_budget_bytes if memory_budget_bytes is not None \
         else DEFAULT_MEMORY_BUDGET_BYTES
     itemsize = np.dtype(dtype).itemsize
     fused = tuple(sorted(set(fused)))
     sched = compute_schedule(plan, k, passive_cache=passive_cache, keep=keep,
-                             fused=fused)
+                             fused=fused, fused_groups=fused_groups)
     per1 = simulate_peak_rows(plan, k, sched) * n * itemsize
     if per1 <= budget:
         batch = max(1, min(max_batch, budget // max(per1, 1)))
         return ExecutionChoice(int(batch), sched, per1, budget, True)
     if not allow_chunking:
         return ExecutionChoice(1, sched, per1, budget, False)
+
+    # chunked path: drop the shared groups AND their members from fused
+    # (members return to the y-cache — one SpMM per shared passive, just
+    # materialized in HBM; singleton-fusing them would pay it per consumer)
+    if fused_groups:
+        members = {m for grp in fused_groups for m in grp}
+        fused = tuple(i for i in fused if i not in members)
 
     budget_rows = budget // (n * itemsize)
     cmap: dict[int, int] = {}
@@ -550,6 +639,10 @@ class PlanExecutor:
     * ``combine_direct(idx, m_a, m_p)``: used for chunked nodes, fused
       SpMM->eMA nodes, and cache-less walks (FASCIA) — consumes the passive
       *table* directly (the engine picks chunked/fused kernel per node);
+    * ``combine_group(members, m_as, m_p)``: one shared-passive launch for a
+      whole ``fused_groups`` group — returns one table per member. Required
+      iff the schedule carries groups; invoked at the group's first member's
+      step, later member steps only process their frees;
     * ``on_step(step, live_bytes)``: optional instrumentation hook called
       twice per step (post-compute and post-free) with the live table bytes
       (unique buffers only), so measured peaks can be checked against
@@ -578,7 +671,8 @@ class PlanExecutor:
         return total
 
     def run(self, leaf, *, passive_op=None, combine=None,
-            combine_direct=None, on_step=None, outputs=None):
+            combine_direct=None, combine_group=None, on_step=None,
+            outputs=None):
         """Walk the schedule; returns the root table, or — when ``outputs``
         (a tuple of node indices) is given — one table per output index.
         Every non-root output must be in the schedule's ``keep`` set, i.e.
@@ -586,11 +680,15 @@ class PlanExecutor:
         plan, sched = self.plan, self.schedule
         chunks = sched.chunk_map
         fset = sched.fused_set
+        group_of = sched.group_of
         if sched.passive_cache and passive_op is None:
             raise ValueError("schedule expects a passive_op "
                              "(built with passive_cache=True)")
         if not sched.passive_cache and combine_direct is None:
             raise ValueError("cache-less schedule needs combine_direct")
+        if group_of and combine_group is None:
+            raise ValueError("schedule carries fused_groups; run() needs a "
+                             "combine_group callback")
         tables: dict[int, object] = {}
         y: dict[int, object] = {}
         root_idx = plan.n_nodes - 1
@@ -605,6 +703,18 @@ class PlanExecutor:
             node = plan.nodes[idx]
             if node.is_leaf:
                 tables[idx] = leaf
+            elif idx in group_of and chunks.get(idx, 1) <= 1:
+                grp = group_of[idx]
+                if idx not in tables:
+                    # leader step: one launch materializes EVERY member
+                    with _tracing.span("plan.node", idx=idx, size=node.size,
+                                       mode="fused_shared", group=len(grp)):
+                        outs_g = combine_group(
+                            grp, [tables[plan.nodes[m].active] for m in grp],
+                            tables[node.passive])
+                    for m, t in zip(grp, outs_g):
+                        tables[m] = t
+                # non-leader member steps: table already present, only frees
             else:
                 m_a = tables[node.active]
                 direct = (not sched.passive_cache) \

@@ -4,13 +4,14 @@ from repro.graph.coloring import iteration_key, random_coloring
 from repro.graph.generators import (barabasi_albert, complete_graph,
                                     erdos_renyi, grid_2d, path_graph,
                                     random_regular, rmat, star)
-from repro.graph.reorder import apply_order, degree_order, rcm_order
+from repro.graph.reorder import (ORDERINGS, apply_order, degree_order,
+                                 inverse_order, rcm_order)
 from repro.graph.structure import BsrMatrix, EdgeChunks, Graph
 
 __all__ = [
     "iteration_key", "random_coloring",
     "barabasi_albert", "complete_graph", "erdos_renyi", "grid_2d",
     "path_graph", "random_regular", "rmat", "star",
-    "apply_order", "degree_order", "rcm_order",
+    "ORDERINGS", "apply_order", "degree_order", "inverse_order", "rcm_order",
     "BsrMatrix", "EdgeChunks", "Graph",
 ]

@@ -3,6 +3,17 @@
 Reverse Cuthill-McKee concentrates nonzeros near the diagonal, which on TPU
 translates directly into fewer nonempty 128x128 BSR tiles for the MXU SpMM
 path. Degree sorting helps the gather path's destination-tile balance.
+
+Engines opt in with ``build_engine(..., reorder="rcm")``: the graph is
+permuted ONCE at engine construction, the whole plan walk runs in the
+permuted vertex space, and only the coloring input / root-table output are
+permuted at the engine boundary (see ``core/engines.py``). Orderings are
+registered in :data:`ORDERINGS` by the name the engine/API/service accept.
+
+Conventions: an ordering is ``order[new_id] = old_id``; its inverse is
+``inv[old_id] = new_id`` (``inverse_order``). A coloring permutes as
+``colors[..., order]`` and a per-vertex table inverse-permutes back as
+``table[..., inv]``.
 """
 
 from __future__ import annotations
@@ -11,7 +22,8 @@ import numpy as np
 
 from repro.graph.structure import Graph
 
-__all__ = ["rcm_order", "degree_order", "apply_order"]
+__all__ = ["rcm_order", "degree_order", "apply_order", "inverse_order",
+           "ORDERINGS"]
 
 
 def rcm_order(g: Graph) -> np.ndarray:
@@ -50,10 +62,33 @@ def degree_order(g: Graph, descending: bool = True) -> np.ndarray:
     return o[::-1].copy() if descending else o
 
 
-def apply_order(g: Graph, order: np.ndarray) -> Graph:
-    """Relabel graph so new vertex i is old vertex order[i]."""
+# name -> ordering function; the vocabulary `reorder=` accepts everywhere
+# (engine constructor, repro.api, the service CLI)
+ORDERINGS = {"rcm": rcm_order, "degree": degree_order}
+
+
+def inverse_order(order: np.ndarray) -> np.ndarray:
+    """inv[old_id] = new_id for an ``order[new_id] = old_id`` permutation."""
     inv = np.empty_like(order)
-    inv[order] = np.arange(g.n)
+    inv[order] = np.arange(len(order))
+    return inv
+
+
+def apply_order(g: Graph, order: np.ndarray) -> Graph:
+    """Relabel graph so new vertex i is old vertex order[i].
+
+    Returns a FRESH :class:`Graph` built from the relabeled edge list — no
+    cached derived state (BSR blocks, fingerprint, degree arrays, ELL pads)
+    leaks across from ``g``; everything is recomputed lazily for the new
+    labeling. ``order`` must be a permutation of ``range(g.n)``.
+    """
+    order = np.asarray(order)
+    if order.shape != (g.n,) or not np.array_equal(
+            np.sort(order), np.arange(g.n)):
+        raise ValueError(
+            f"order must be a permutation of range({g.n}), got shape "
+            f"{order.shape}")
+    inv = inverse_order(order)
     src, dst = g.edges_by_dst
     new_edges = np.stack([inv[src], inv[dst]], axis=1)
     return Graph.from_edges(g.n, new_edges)

@@ -4,8 +4,9 @@ Fused plans dispatch only a handful of distinct ``(B, C, N)`` table shapes
 per engine, so exhaustive per-shape timing is cheap: each candidate block
 configuration is compiled once and timed over a few repetitions, and the
 winner is cached in-process keyed by (kernel kind, shape signature, dtype,
-interpret flag). Subsequent dispatches with the same signature pay a dict
-lookup.
+interpret flag, vertex-reorder choice). Subsequent dispatches with the same
+signature pay a dict lookup; ``autotune_cache_{hits,misses}_total`` counters
+in the obs registry make the reuse rate observable.
 
 ``measure=False`` (the default for :func:`ema_blocks` callers that pass
 ``autotune=False``) never runs the sweep — dispatch falls back to the static
@@ -67,10 +68,9 @@ def autotune(key: Hashable, candidates: Sequence, make_fn: Callable,
     """
     kind = str(key[0]) if isinstance(key, tuple) and key else "unknown"
     if key in _CACHE:
-        _metrics.counter("autotune_cache_total", kind=kind,
-                         result="hit").inc()
+        _metrics.counter("autotune_cache_hits_total", kind=kind).inc()
         return _CACHE[key]
-    _metrics.counter("autotune_cache_total", kind=kind, result="miss").inc()
+    _metrics.counter("autotune_cache_misses_total", kind=kind).inc()
     best, best_t = None, float("inf")
     with _tracing.span("autotune.sweep", kind=kind,
                        candidates=len(candidates)):
@@ -90,9 +90,14 @@ def autotune(key: Hashable, candidates: Sequence, make_fn: Callable,
 def ema_blocks(m_a, y_p, ia, ip, *, interpret: bool,
                candidates: Sequence[tuple[int, int]] = EMA_BLOCK_CANDIDATES
                ) -> tuple[int, int]:
-    """Tuned (s_block, n_block) for :func:`..ema.pallas_ema.ema_pallas`."""
+    """Tuned (s_block, n_block) for :func:`..ema.pallas_ema.ema_pallas`.
+
+    The key carries the backend kind, both table dtypes, and the interpret
+    flag alongside the shapes — a bf16 sweep never reuses f32 timings. (The
+    eMA kernel has no graph operand, so no reorder component here.)"""
     from repro.kernels.ema.pallas_ema import ema_pallas
-    key = ("ema", m_a.shape, y_p.shape, ia.shape, str(m_a.dtype), interpret)
+    key = ("ema", m_a.shape, y_p.shape, ia.shape, str(m_a.dtype),
+           str(y_p.dtype), interpret)
 
     def make(cand):
         sb, nb = cand
@@ -103,16 +108,19 @@ def ema_blocks(m_a, y_p, ia, ip, *, interpret: bool,
 
 
 def spmm_c_block(m, run_with_c_block: Callable[[int], object], *,
-                 kind: str, interpret: bool,
+                 kind: str, interpret: bool, reorder: str = "",
                  candidates: Sequence[int] = SPMM_C_BLOCK_CANDIDATES) -> int:
     """Tuned c_block for the Pallas SpMM kernels (gather / bsr / fused).
 
     ``run_with_c_block(c)`` runs the kernel with that block size; candidates
-    larger than the (padded) row count are skipped up front.
+    larger than the (padded) row count are skipped up front. The cache key
+    is (backend kind, shape, dtype, interpret, reorder): a tuned block for
+    the RCM-reordered BSR stream is a different entry than the identity
+    order's — the block stream, and thus the winner, differs.
     """
     rows = m.shape[-2] if m.ndim >= 2 else 1
     cands = tuple(c for c in candidates if c <= max(rows, min(candidates)))
     if not cands:
         cands = (min(candidates),)
-    key = (kind, m.shape, str(m.dtype), interpret)
+    key = (kind, m.shape, str(m.dtype), interpret, reorder)
     return autotune(key, cands, lambda c: (lambda: run_with_c_block(c)))

@@ -23,40 +23,76 @@ from repro.kernels.ema.pallas_ema import ema_pallas
 from repro.obs import metrics as _metrics
 
 __all__ = ["ema", "ema_xla", "ema_chunked", "pack_chunked_splits",
-           "ChunkedSplits", "ema_flops", "pallas_supports_dtype"]
+           "ChunkedSplits", "ema_flops", "pallas_supports_dtype",
+           "pallas_dtype_pair", "accum_dtype"]
 
 # VMEM budget for the Pallas path: both child tables + out block.
 _PALLAS_VMEM_BYTES = 12 * 2 ** 20
 _PALLAS_S_BLOCK = 8
 _PALLAS_N_BLOCK = 512
 
-# Float dtypes the Pallas kernels handle without downcasting. Interpret mode
-# executes as ordinary XLA ops, so any float works; the compiled Mosaic path
-# is float32-only today (f64 is unsupported on the TPU vector unit and bf16
-# accumulation would change the counts).
-_INTERPRET_DTYPES = frozenset({np.dtype(jnp.float32), np.dtype(jnp.float64),
-                               np.dtype(jnp.bfloat16)})
-_COMPILED_DTYPES = frozenset({np.dtype(jnp.float32)})
+# (storage dtype) -> (storage, accumulator) pairs the Pallas kernels run
+# without *losing* precision relative to the storage contract. bf16 tables
+# are admitted in BOTH modes because every kernel accumulates partial
+# products in an f32 VMEM accumulator and casts only at the final store —
+# halving HBM table traffic without bf16 accumulation error. f64 stays
+# interpret-only (the TPU vector unit has no f64).
+_INTERPRET_PAIRS = {
+    np.dtype(jnp.float32): np.dtype(jnp.float32),
+    np.dtype(jnp.float64): np.dtype(jnp.float64),
+    np.dtype(jnp.bfloat16): np.dtype(jnp.float32),
+}
+_COMPILED_PAIRS = {
+    np.dtype(jnp.float32): np.dtype(jnp.float32),
+    np.dtype(jnp.bfloat16): np.dtype(jnp.float32),
+}
+
+
+def pallas_dtype_pair(dtype, interpret: bool
+                      ) -> tuple[np.dtype, np.dtype] | None:
+    """(storage, accumulator) dtype pair for the Pallas kernels, or None.
+
+    None means the kernels cannot run this dtype in this mode without
+    downcasting — the dispatch layers fall back to XLA explicitly.
+    """
+    dt = np.dtype(dtype)
+    table = _INTERPRET_PAIRS if interpret else _COMPILED_PAIRS
+    acc = table.get(dt)
+    return None if acc is None else (dt, acc)
 
 
 def pallas_supports_dtype(dtype, interpret: bool) -> bool:
     """Whether the Pallas kernels can run this dtype *without* downcasting."""
+    return pallas_dtype_pair(dtype, interpret) is not None
+
+
+def accum_dtype(dtype) -> np.dtype:
+    """Accumulator dtype for a storage dtype: sub-f32 storage accumulates
+    in f32 (kernel scratch AND the XLA fallback paths), wider passes
+    through. This is the \"final reductions in f32\" half of the bf16
+    contract — storage is narrow, arithmetic is not."""
     dt = np.dtype(dtype)
-    return dt in (_INTERPRET_DTYPES if interpret else _COMPILED_DTYPES)
+    return np.dtype(jnp.float32) if dt.itemsize < 4 else dt
 
 
 def ema_xla(m_a: jnp.ndarray, y_p: jnp.ndarray,
             ia: jnp.ndarray, ip: jnp.ndarray) -> jnp.ndarray:
     """Child tables (..., C, N); gathers run on axis -2 so an optional
-    leading batch dimension broadcasts through the scan untouched."""
+    leading batch dimension broadcasts through the scan untouched.
+    Sub-f32 tables accumulate in f32 and cast back at the end, matching
+    the kernel path's storage/accumulator contract."""
+    store = m_a.dtype
+    acc_dt = accum_dtype(store)
+
     def body(acc, idx):
         ia_l, ip_l = idx
-        term = jnp.take(m_a, ia_l, axis=-2) * jnp.take(y_p, ip_l, axis=-2)
+        term = jnp.take(m_a, ia_l, axis=-2).astype(acc_dt) \
+            * jnp.take(y_p, ip_l, axis=-2).astype(acc_dt)
         return acc + term, None
 
-    acc0 = jnp.zeros(m_a.shape[:-2] + (ia.shape[0], m_a.shape[-1]), m_a.dtype)
+    acc0 = jnp.zeros(m_a.shape[:-2] + (ia.shape[0], m_a.shape[-1]), acc_dt)
     acc, _ = jax.lax.scan(body, acc0, (ia.T, ip.T))
-    return acc
+    return acc.astype(store)
 
 
 def ema(m_a: jnp.ndarray, y_p: jnp.ndarray, ia: jnp.ndarray, ip: jnp.ndarray,

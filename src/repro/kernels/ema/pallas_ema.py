@@ -16,8 +16,10 @@ vector loads with a dynamic base — cheap relative to the lane-dynamic gathers
 the naive layout would need (that asymmetry is the whole point of the paper's
 column-major layout, transposed to TPU lanes).
 
-Tables of any float dtype pass through unchanged (out/accumulator dtype =
-promoted input dtype); the padded tail of the split-table axis is masked, so
+Tables of any admitted float dtype pass through with output dtype = promoted
+input dtype; rows accumulate in the (storage, accum) pair's accumulator
+dtype (f32 for bf16 tables — see ``ops.pallas_dtype_pair``) and cast only at
+the final store; the padded tail of the split-table axis is masked, so
 padded rows cost no FMAs and write exact zeros. Runs interpreted on CPU and
 compiled (parallel dimension semantics) on TPU.
 """
@@ -35,7 +37,7 @@ __all__ = ["ema_pallas"]
 
 
 def _kernel(ia_ref, ip_ref, ma_ref, yp_ref, out_ref, *, s_block: int, l: int,
-            s_total: int):
+            s_total: int, acc_dtype):
     sb = pl.program_id(1)
     n_blk = out_ref.shape[-1]
     dtype = out_ref.dtype
@@ -44,21 +46,23 @@ def _kernel(ia_ref, ip_ref, ma_ref, yp_ref, out_ref, *, s_block: int, l: int,
         s_global = sb * s_block + s
 
         def compute_row():
+            # rows accumulate in acc_dtype (f32 for bf16 storage) and cast
+            # at the store, so narrow tables never pay accumulation error
             def l_body(j, row):
                 ia = ia_ref[s_global, j]
                 ip = ip_ref[s_global, j]
                 a_row = ma_ref[0, pl.dslice(ia, 1), :]   # (1, N_BLK)
                 p_row = yp_ref[0, pl.dslice(ip, 1), :]   # (1, N_BLK)
-                return row + a_row * p_row
+                return row + a_row.astype(acc_dtype) * p_row.astype(acc_dtype)
 
             return jax.lax.fori_loop(0, l, l_body,
-                                     jnp.zeros((1, n_blk), dtype))
+                                     jnp.zeros((1, n_blk), acc_dtype))
 
         # padded split rows (s_global >= s_total) skip the FMA loop entirely
         # and store zeros, so padding costs no work and no garbage values
         row = jax.lax.cond(s_global < s_total, compute_row,
-                           lambda: jnp.zeros((1, n_blk), dtype))
-        out_ref[0, pl.dslice(s, 1), :] = row
+                           lambda: jnp.zeros((1, n_blk), acc_dtype))
+        out_ref[0, pl.dslice(s, 1), :] = row.astype(dtype)
         return 0
 
     jax.lax.fori_loop(0, s_block, s_body, 0)
@@ -120,8 +124,10 @@ def ema_pallas(
         out_specs=pl.BlockSpec((1, s_block, n_block),
                                lambda bb, sb, nb, IA, IP: (bb, sb, nb)),
     )
+    from repro.kernels.ema.ops import accum_dtype
     out = pl.pallas_call(
-        functools.partial(_kernel, s_block=s_block, l=l, s_total=s),
+        functools.partial(_kernel, s_block=s_block, l=l, s_total=s,
+                          acc_dtype=accum_dtype(dtype)),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, s_pad, n_pad), dtype),
         interpret=interpret,

@@ -9,7 +9,14 @@ fallback); ``fused_spmm_ema(m_a, m_p, ia, ip, prep)`` computes
 without materializing the ``(B, C(k,t_p), N)`` neighbor-sum table in HBM —
 the whole point of the fusion (see pallas_fused.py). Unsupported dtypes or
 tables too large for VMEM run the unfused XLA pair (segment SpMM + scan eMA)
-explicitly; the kernel path never downcasts.
+explicitly; the kernel path never downcasts. Sub-f32 storage dtypes (bf16)
+stream half the table/adjacency bytes while the kernels accumulate in the
+(storage, accum) pair's f32 member.
+
+``fused_spmm_ema_shared`` is the group form: several consumers of ONE
+passive child computed by a single launch whose SpMM leg runs once into
+shared VMEM scratch (see ``fused_spmm_ema_shared_pallas``). Its fallback
+preserves the sharing: one XLA segment SpMM, then one eMA per consumer.
 """
 
 from __future__ import annotations
@@ -22,13 +29,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graph.structure import Graph
-from repro.kernels.ema.ops import (_PALLAS_VMEM_BYTES, ema_xla,
+from repro.kernels.ema.ops import (_PALLAS_VMEM_BYTES, accum_dtype, ema_xla,
                                    pallas_supports_dtype)
 from repro.kernels.fused.pallas_fused import (batch_block_fits,
-                                              fused_spmm_ema_pallas)
+                                              fused_spmm_ema_pallas,
+                                              fused_spmm_ema_shared_pallas,
+                                              group_batch_block_fits)
 from repro.obs import metrics as _metrics
 
-__all__ = ["FusedPrep", "prepare_fused", "fused_spmm_ema", "fused_fits_vmem"]
+__all__ = ["FusedPrep", "prepare_fused", "fused_spmm_ema",
+           "fused_spmm_ema_shared", "fused_fits_vmem",
+           "fused_group_fits_vmem"]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -55,20 +66,24 @@ class FusedPrep:
         return int(self.arrays["blocks"].shape[0])
 
 
-def prepare_fused(g: Graph, *, tile: int = 128,
-                  interpret: bool = True) -> FusedPrep:
+def prepare_fused(g: Graph, *, tile: int = 128, interpret: bool = True,
+                  dtype=jnp.float32, reorder: str = "") -> FusedPrep:
     """BSR block stream (every dst tile populated, sorted by dst tile) plus
-    the raw edge lists for the XLA fallback path."""
+    the raw edge lists for the XLA fallback path. ``dtype`` is the storage
+    dtype the adjacency blocks are held in (bf16 halves their HBM bytes);
+    ``reorder`` tags the prep with the vertex-ordering choice for the
+    autotune cache key, same as ``spmm.ops.prepare``."""
     gp = g.padded(tile)
     bs = gp.bsr(tile=tile)
     src, dst = g.edges_by_dst
     return FusedPrep(
         g.n,
-        {"blocks": jnp.asarray(bs.blocks),
+        {"blocks": jnp.asarray(bs.blocks, jnp.dtype(dtype)),
          "src_tile": jnp.asarray(bs.src_tile),
          "dst_tile": jnp.asarray(bs.dst_tile),
          "fb_src": jnp.asarray(src), "fb_dst": jnp.asarray(dst)},
-        {"tile": tile, "n_tiles": bs.n_tiles, "interpret": interpret},
+        {"tile": tile, "n_tiles": bs.n_tiles, "interpret": interpret,
+         "reorder": reorder},
     )
 
 
@@ -76,11 +91,26 @@ def fused_fits_vmem(c_a: int, c_p: int, s: int, *, l: int = 0,
                     tile: int = 128, dtype=jnp.float32) -> bool:
     """VMEM residency of one fused grid step: active block + passive block +
     y scratch + adjacency block + the (padded) output block + the resident
-    one-hot split-selection matrices (``l`` splits)."""
-    itemsize = np.dtype(dtype).itemsize
+    one-hot split-selection matrices (``l`` splits). Sized with the
+    accumulator itemsize — the scratch buffers run in the wider pair member
+    even when storage is bf16."""
+    itemsize = np.dtype(accum_dtype(dtype)).itemsize
     s_pad = -(-s // 8) * 8
     rows = c_a + 2 * c_p + tile + s_pad
     sel = l * s_pad * (c_a + c_p)
+    return (rows * tile + sel) * itemsize < _PALLAS_VMEM_BYTES
+
+
+def fused_group_fits_vmem(c_as, c_p: int, ss, ls, *, tile: int = 128,
+                          dtype=jnp.float32) -> bool:
+    """VMEM residency of one shared-passive group step: every consumer's
+    active/output blocks and selection matrices resident together, the
+    passive block and y scratch paid once. Accumulator-itemsize sized,
+    matching :func:`fused_fits_vmem`."""
+    itemsize = np.dtype(accum_dtype(dtype)).itemsize
+    s_pads = [-(-s // 8) * 8 for s in ss]
+    rows = sum(c_as) + sum(s_pads) + 2 * c_p + tile
+    sel = sum(l * sp * (ca + c_p) for l, sp, ca in zip(ls, s_pads, c_as))
     return (rows * tile + sel) * itemsize < _PALLAS_VMEM_BYTES
 
 
@@ -125,7 +155,7 @@ def fused_spmm_ema(m_a: jnp.ndarray, m_p: jnp.ndarray,
     s_pad = -(-ia.shape[0] // 8) * 8
     if not batch_block_fits(1, m_a.shape[-2], m_p.shape[-2], s_pad,
                             ia.shape[1], st["tile"],
-                            np.dtype(dtype).itemsize):
+                            np.dtype(accum_dtype(dtype)).itemsize):
         # even a single-coloring batch block oversubscribes VMEM
         _metrics.counter("kernel_fallbacks_total", kernel="fused",
                          reason="batch_block").inc()
@@ -146,3 +176,68 @@ def fused_spmm_ema(m_a: jnp.ndarray, m_p: jnp.ndarray,
         prep.arrays["dst_tile"], n_tiles=st["n_tiles"], tile=st["tile"],
         interpret=st["interpret"])[:, :, :n]
     return out.reshape(lead + out.shape[-2:]) if batched else out[0]
+
+
+def _fallback_shared(m_as, m_p, ias, ips, prep: FusedPrep) -> tuple:
+    """Shared fallback: the SpMM still runs ONCE (the sharing survives the
+    escape hatch), then one XLA eMA per consumer."""
+    from repro.kernels.spmm.ops import _spmm_segment
+    _metrics.counter("kernel_launches_total", kernel="fused_shared",
+                     path="xla").inc()
+    lead = m_p.shape[:-2]
+    flat = m_p.reshape((-1, m_p.shape[-1]))
+    y = _spmm_segment(flat, prep.arrays["fb_src"], prep.arrays["fb_dst"],
+                      prep.n)
+    y = y.reshape(lead + (m_p.shape[-2], m_p.shape[-1]))
+    return tuple(ema_xla(m_a, y, ia, ip)
+                 for m_a, ia, ip in zip(m_as, ias, ips))
+
+
+def fused_spmm_ema_shared(m_as, m_p: jnp.ndarray, ias, ips,
+                          prep: FusedPrep) -> tuple:
+    """Per-consumer ``ema(m_a_i, m_p @ A, ia_i, ip_i)`` tuple for a group of
+    consumers sharing one passive child. The Pallas path runs the SpMM leg
+    once into shared VMEM scratch; tables have shape (..., C, N) with one
+    optional shared leading batch dimension.
+    """
+    st = prep.static
+    m_as, ias, ips = tuple(m_as), tuple(ias), tuple(ips)
+    dtype = m_p.dtype
+    for m_a in m_as:
+        dtype = jnp.promote_types(dtype, m_a.dtype)
+    c_as = tuple(m.shape[-2] for m in m_as)
+    ss = tuple(ia.shape[0] for ia in ias)
+    ls = tuple(ia.shape[1] for ia in ias)
+    if not pallas_supports_dtype(dtype, st["interpret"]):
+        _metrics.counter("kernel_fallbacks_total", kernel="fused_shared",
+                         reason="dtype_unsupported").inc()
+        return _fallback_shared(m_as, m_p, ias, ips, prep)
+    s_pads = tuple(-(-s // 8) * 8 for s in ss)
+    item = np.dtype(accum_dtype(dtype)).itemsize
+    if not (fused_group_fits_vmem(c_as, m_p.shape[-2], ss, ls,
+                                  tile=st["tile"], dtype=dtype)
+            and group_batch_block_fits(1, c_as, m_p.shape[-2], s_pads, ls,
+                                       st["tile"], item)):
+        _metrics.counter("kernel_fallbacks_total", kernel="fused_shared",
+                         reason="vmem_overflow").inc()
+        return _fallback_shared(m_as, m_p, ias, ips, prep)
+    _metrics.counter("kernel_launches_total", kernel="fused_shared",
+                     path="pallas").inc()
+    batched = m_p.ndim > 2
+    lead = m_p.shape[:-2]
+    n = m_p.shape[-1]
+    m_p3 = m_p.reshape((-1,) + m_p.shape[-2:])
+    m_as3 = tuple(m.reshape((-1,) + m.shape[-2:]) for m in m_as)
+    n_pad = st["n_tiles"] * st["tile"]
+    if n_pad != n:
+        pad = ((0, 0), (0, 0), (0, n_pad - n))
+        m_p3 = jnp.pad(m_p3, pad)
+        m_as3 = tuple(jnp.pad(m, pad) for m in m_as3)
+    outs = fused_spmm_ema_shared_pallas(
+        m_as3, m_p3, ias, ips, prep.arrays["blocks"],
+        prep.arrays["src_tile"], prep.arrays["dst_tile"],
+        n_tiles=st["n_tiles"], tile=st["tile"], interpret=st["interpret"])
+    outs = tuple(out[:, :, :n] for out in outs)
+    if batched:
+        return tuple(out.reshape(lead + out.shape[-2:]) for out in outs)
+    return tuple(out[0] for out in outs)

@@ -28,9 +28,18 @@ and come out exact zeros; padded batch rows see zero tables.
 
 Correct under interpret mode on CPU; ``dimension_semantics`` set for the
 compiled TPU path (the batched ``dot_general`` contractions need a Mosaic
-with batched-dot support). All dtypes the dispatch layer admits (see
-``ema.ops.pallas_supports_dtype``) flow through out_shape, the scratch
-accumulator, and both matmul accumulations.
+with batched-dot support). Dtypes the dispatch layer admits (see
+``ema.ops.pallas_dtype_pair``) split into a (storage, accumulator) pair:
+tables and adjacency blocks stream in the storage dtype (bf16 halves their
+HBM traffic), while the y scratch and the split-combination accumulator run
+in the pair's accumulator dtype (f32 for bf16) and cast only at the output
+store.
+
+``fused_spmm_ema_shared_pallas`` generalizes the launch to a GROUP of
+consumers sharing one passive child: the SpMM leg runs ONCE into the shared
+y scratch, then each consumer's split combination reads it and writes its
+own output table — the shared sub-templates a fused multi-template plan
+creates cost one SpMM for the whole group instead of one per consumer.
 """
 
 from __future__ import annotations
@@ -42,7 +51,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["fused_spmm_ema_pallas", "pick_batch_block", "batch_block_fits"]
+__all__ = ["fused_spmm_ema_pallas", "fused_spmm_ema_shared_pallas",
+           "pick_batch_block", "batch_block_fits",
+           "group_batch_block_fits", "pick_group_batch_block"]
 
 # conservative per-core VMEM working-set budget (matches ema.ops)
 _VMEM_BUDGET = 12 * 1024 * 1024
@@ -77,7 +88,7 @@ def _kernel(dst_tile_ref, src_tile_ref,                   # scalar prefetch
             *, l: int):
     b = pl.program_id(1)
     nb = pl.num_programs(1)
-    dtype = out_ref.dtype
+    acc_dtype = y_ref.dtype      # accumulator pair member (f32 for bf16)
 
     # --- SpMM leg: accumulate this destination tile's neighbor sums in VMEM
     is_first = jnp.logical_or(
@@ -90,9 +101,10 @@ def _kernel(dst_tile_ref, src_tile_ref,                   # scalar prefetch
 
     # (bb, Cp, tile) @ (tile, tile): fold the batch block into matmul rows
     bb, c_p, tile = y_ref.shape
-    mp_flat = mp_ref[...].reshape(bb * c_p, tile)
+    mp_flat = mp_ref[...].reshape(bb * c_p, tile).astype(acc_dtype)
     y_ref[...] += jax.lax.dot(
-        mp_flat, blocks_ref[0].astype(dtype), preferred_element_type=dtype
+        mp_flat, blocks_ref[0].astype(acc_dtype),
+        preferred_element_type=acc_dtype,
     ).reshape(bb, c_p, tile)
 
     # --- eMA leg: on the tile's last block, combine and write the output.
@@ -109,19 +121,20 @@ def _kernel(dst_tile_ref, src_tile_ref,                   # scalar prefetch
     def _combine():
         s_pad = out_ref.shape[1]
         contract = (((1,), (1,)), ((), ()))   # sel (S,C) x table (bb,C,tile)
+        ma = ma_ref[...].astype(acc_dtype)
 
         def body(i, acc):
-            sel_a = sela_ref[pl.dslice(i, 1)][0]          # (S_pad, Ca)
-            sel_p = selp_ref[pl.dslice(i, 1)][0]          # (S_pad, Cp)
+            sel_a = sela_ref[pl.dslice(i, 1)][0].astype(acc_dtype)  # (S_pad, Ca)
+            sel_p = selp_ref[pl.dslice(i, 1)][0].astype(acc_dtype)  # (S_pad, Cp)
             a_rows = jax.lax.dot_general(
-                sel_a, ma_ref[...], contract, preferred_element_type=dtype)
+                sel_a, ma, contract, preferred_element_type=acc_dtype)
             p_rows = jax.lax.dot_general(
-                sel_p, y_ref[...], contract, preferred_element_type=dtype)
+                sel_p, y_ref[...], contract, preferred_element_type=acc_dtype)
             return acc + a_rows * p_rows                  # (S_pad, bb, tile)
 
         acc = jax.lax.fori_loop(
-            0, l, body, jnp.zeros((s_pad, bb, tile), dtype))
-        out_ref[...] = acc.transpose(1, 0, 2)
+            0, l, body, jnp.zeros((s_pad, bb, tile), acc_dtype))
+        out_ref[...] = acc.transpose(1, 0, 2).astype(out_ref.dtype)
 
 
 @functools.partial(
@@ -147,12 +160,16 @@ def fused_spmm_ema_pallas(
     b, _, n = m_a.shape
     assert n == n_tiles * tile, (n, n_tiles, tile)
     assert m_p.shape[0] == b and m_p.shape[2] == n
+    from repro.kernels.ema.ops import accum_dtype
     dtype = jnp.promote_types(m_a.dtype, m_p.dtype)
+    acc_dt = jnp.dtype(accum_dtype(dtype))
     m_a = m_a.astype(dtype)
     m_p = m_p.astype(dtype)
     c_a, c_p = m_a.shape[1], m_p.shape[1]
     s_pad = -(-s // 8) * 8          # sublane multiple for the output block
-    bb = pick_batch_block(b, c_a, c_p, s_pad, l, tile, dtype.itemsize)
+    # fit check uses the accumulator itemsize: the y scratch and fori
+    # accumulator dominate the working set and live in the wider dtype
+    bb = pick_batch_block(b, c_a, c_p, s_pad, l, tile, acc_dt.itemsize)
     b_pad = -(-b // bb) * bb
     if b_pad != b:
         m_a = jnp.pad(m_a, ((0, b_pad - b), (0, 0), (0, 0)))
@@ -184,7 +201,7 @@ def fused_spmm_ema_pallas(
         ],
         out_specs=pl.BlockSpec((bb, s_pad, tile),
                                lambda g, blk, dt, st: (g, 0, dt[blk])),
-        scratch_shapes=[pltpu.VMEM((bb, c_p, tile), dtype)],
+        scratch_shapes=[pltpu.VMEM((bb, c_p, tile), acc_dt)],
     )
     out = pl.pallas_call(
         functools.partial(_kernel, l=l),
@@ -196,3 +213,179 @@ def fused_spmm_ema_pallas(
         ),
     )(dst_tile, src_tile, blocks, m_a, m_p, sel_a, sel_p)
     return out[:b, :s, :]
+
+
+# ---------------------------------------------------------------------------
+# Shared-passive group launch: one SpMM leg, many consumers
+# ---------------------------------------------------------------------------
+
+def group_batch_block_fits(bb: int, c_as: tuple[int, ...], c_p: int,
+                           s_pads: tuple[int, ...], ls: tuple[int, ...],
+                           tile: int, itemsize: int) -> bool:
+    """VMEM fit for a shared-passive group step: every consumer's active and
+    output blocks are resident simultaneously, but the passive block and the
+    y scratch are paid ONCE for the whole group."""
+    per_b = (sum(c_as) + sum(s_pads) + 2 * c_p) * tile
+    fixed = tile * tile + sum(
+        l * sp * (ca + c_p) for l, sp, ca in zip(ls, s_pads, c_as))
+    return (bb * per_b + fixed) * itemsize < _VMEM_BUDGET
+
+
+def pick_group_batch_block(b: int, c_as: tuple[int, ...], c_p: int,
+                           s_pads: tuple[int, ...], ls: tuple[int, ...],
+                           tile: int, itemsize: int) -> int:
+    """Largest batch block whose group working set fits VMEM; floors at 1."""
+    bb = max(1, b)
+    while bb > 1 and not group_batch_block_fits(bb, c_as, c_p, s_pads, ls,
+                                                tile, itemsize):
+        bb = -(-bb // 2)
+    return bb
+
+
+def _shared_kernel(dst_tile_ref, src_tile_ref,            # scalar prefetch
+                   *refs, n_cons: int, ls: tuple[int, ...]):
+    # refs layout: blocks, mp, (ma_i, sela_i, selp_i) x n_cons,
+    #              out_i x n_cons, y scratch
+    blocks_ref, mp_ref = refs[0], refs[1]
+    cons = [refs[2 + 3 * i: 5 + 3 * i] for i in range(n_cons)]
+    outs = refs[2 + 3 * n_cons: 2 + 4 * n_cons]
+    y_ref = refs[-1]
+    b = pl.program_id(1)
+    nb = pl.num_programs(1)
+    acc_dtype = y_ref.dtype
+
+    is_first = jnp.logical_or(
+        b == 0, dst_tile_ref[b] != dst_tile_ref[jnp.maximum(b - 1, 0)]
+    )
+
+    @pl.when(is_first)
+    def _zero():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    bb, c_p, tile = y_ref.shape
+    mp_flat = mp_ref[...].reshape(bb * c_p, tile).astype(acc_dtype)
+    y_ref[...] += jax.lax.dot(
+        mp_flat, blocks_ref[0].astype(acc_dtype),
+        preferred_element_type=acc_dtype,
+    ).reshape(bb, c_p, tile)
+
+    is_last = jnp.logical_or(
+        b == nb - 1, dst_tile_ref[b] != dst_tile_ref[jnp.minimum(b + 1, nb - 1)]
+    )
+
+    @pl.when(is_last)
+    def _combine():
+        contract = (((1,), (1,)), ((), ()))
+        # the consumer loop unrolls at trace time; every consumer reads the
+        # SAME resident y scratch — the SpMM leg was paid once above
+        for ci in range(n_cons):
+            ma_ref, sela_ref, selp_ref = cons[ci]
+            out_ref = outs[ci]
+            s_pad = out_ref.shape[1]
+            ma = ma_ref[...].astype(acc_dtype)
+
+            def body(i, acc, sela_ref=sela_ref, selp_ref=selp_ref, ma=ma):
+                sel_a = sela_ref[pl.dslice(i, 1)][0].astype(acc_dtype)
+                sel_p = selp_ref[pl.dslice(i, 1)][0].astype(acc_dtype)
+                a_rows = jax.lax.dot_general(
+                    sel_a, ma, contract, preferred_element_type=acc_dtype)
+                p_rows = jax.lax.dot_general(
+                    sel_p, y_ref[...], contract,
+                    preferred_element_type=acc_dtype)
+                return acc + a_rows * p_rows
+
+            acc = jax.lax.fori_loop(
+                0, ls[ci], body, jnp.zeros((s_pad, bb, tile), acc_dtype))
+            out_ref[...] = acc.transpose(1, 0, 2).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_tiles", "tile", "interpret")
+)
+def fused_spmm_ema_shared_pallas(
+    m_as: tuple,             # per-consumer (B, Ca_i, N) float
+    m_p: jnp.ndarray,        # (B, Cp, N) float — the shared passive table
+    ias: tuple,              # per-consumer (S_i, L_i) int32
+    ips: tuple,              # per-consumer (S_i, L_i) int32
+    blocks: jnp.ndarray,     # (n_blocks, tile, tile) adjacency tiles
+    src_tile: jnp.ndarray,   # (n_blocks,) int32
+    dst_tile: jnp.ndarray,   # (n_blocks,) int32, sorted ascending, all tiles
+    *,
+    n_tiles: int,
+    tile: int = 128,
+    interpret: bool = True,
+) -> tuple:
+    """-> per-consumer (B, S_i, N) tuple: every consumer's
+    ``ema(m_a_i, m_p @ A, ia_i, ip_i)`` from ONE launch whose SpMM leg runs
+    once into shared VMEM scratch. Inputs must be 3-D (batched)."""
+    from repro.kernels.ema.ops import accum_dtype
+    n_cons = len(m_as)
+    assert n_cons == len(ias) == len(ips) and n_cons >= 1
+    b, _, n = m_as[0].shape
+    assert n == n_tiles * tile, (n, n_tiles, tile)
+    assert m_p.shape[0] == b and m_p.shape[2] == n
+    dtype = m_p.dtype
+    for ma in m_as:
+        dtype = jnp.promote_types(dtype, ma.dtype)
+    acc_dt = jnp.dtype(accum_dtype(dtype))
+    m_p = m_p.astype(dtype)
+    m_as = tuple(ma.astype(dtype) for ma in m_as)
+    c_p = m_p.shape[1]
+    c_as = tuple(ma.shape[1] for ma in m_as)
+    ss = tuple(ia.shape[0] for ia in ias)
+    ls = tuple(ia.shape[1] for ia in ias)
+    s_pads = tuple(-(-s // 8) * 8 for s in ss)
+    bb = pick_group_batch_block(b, c_as, c_p, s_pads, ls, tile,
+                                acc_dt.itemsize)
+    b_pad = -(-b // bb) * bb
+    if b_pad != b:
+        pad = ((0, b_pad - b), (0, 0), (0, 0))
+        m_p = jnp.pad(m_p, pad)
+        m_as = tuple(jnp.pad(ma, pad) for ma in m_as)
+    sel_as, sel_ps = [], []
+    for ia, ip, c_a, s, s_pad in zip(ias, ips, c_as, ss, s_pads):
+        sa = (ia.T[:, :, None] == jnp.arange(c_a)).astype(dtype)  # (L, S, Ca)
+        sp = (ip.T[:, :, None] == jnp.arange(c_p)).astype(dtype)  # (L, S, Cp)
+        if s_pad != s:
+            pad = ((0, 0), (0, s_pad - s), (0, 0))
+            sa, sp = jnp.pad(sa, pad), jnp.pad(sp, pad)
+        sel_as.append(sa)
+        sel_ps.append(sp)
+    n_blocks = blocks.shape[0]
+
+    in_specs = [
+        pl.BlockSpec((1, tile, tile), lambda g, blk, dt, st: (blk, 0, 0)),
+        pl.BlockSpec((bb, c_p, tile), lambda g, blk, dt, st: (g, 0, st[blk])),
+    ]
+    operands = [blocks, m_p]
+    for ci in range(n_cons):
+        in_specs.append(pl.BlockSpec(
+            (bb, c_as[ci], tile), lambda g, blk, dt, st: (g, 0, dt[blk])))
+        in_specs.append(pl.BlockSpec(
+            (ls[ci], s_pads[ci], c_as[ci]), lambda g, blk, dt, st: (0, 0, 0)))
+        in_specs.append(pl.BlockSpec(
+            (ls[ci], s_pads[ci], c_p), lambda g, blk, dt, st: (0, 0, 0)))
+        operands += [m_as[ci], sel_as[ci], sel_ps[ci]]
+    out_specs = [
+        pl.BlockSpec((bb, sp, tile), lambda g, blk, dt, st: (g, 0, dt[blk]))
+        for sp in s_pads
+    ]
+    out_shape = [jax.ShapeDtypeStruct((b_pad, sp, n), dtype) for sp in s_pads]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b_pad // bb, n_blocks),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=[pltpu.VMEM((bb, c_p, tile), acc_dt)],
+    )
+    outs = pl.pallas_call(
+        functools.partial(_shared_kernel, n_cons=n_cons, ls=ls),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+    )(dst_tile, src_tile, *operands)
+    return tuple(out[:b, :s, :] for out, s in zip(outs, ss))

@@ -58,7 +58,15 @@ class SpmmPrep:
 
 
 def prepare(g: Graph, method: str = "segment", *, tile: int = 128,
-            chunk_size: int = 512, interpret: bool = True) -> SpmmPrep:
+            chunk_size: int = 512, interpret: bool = True,
+            dtype=jnp.float32, reorder: str = "") -> SpmmPrep:
+    """``dtype`` is the table *storage* dtype: the Pallas backends store
+    their adjacency operand (dense BSR blocks / gather masks) in it, so a
+    bf16 engine streams half the adjacency bytes; kernels still accumulate
+    in the (storage, accum) pair's accumulator. ``reorder`` tags the prep
+    with the vertex-ordering choice the graph was built under — it rides
+    ``static`` into the autotune cache key so timings never cross block
+    streams with different locality."""
     if method not in METHODS:
         raise ValueError(f"unknown spmm method {method!r}")
     if method == "segment":
@@ -76,28 +84,35 @@ def prepare(g: Graph, method: str = "segment", *, tile: int = 128,
     # (never a silent downcast).
     fb_src, fb_dst = g.edges_by_dst
     fb = {"fb_src": jnp.asarray(fb_src), "fb_dst": jnp.asarray(fb_dst)}
+    adj_dtype = jnp.dtype(dtype)
     if method == "pallas_gather":
         gp = g.padded(tile)
         ch = gp.edge_chunks(tile=tile, chunk_size=chunk_size)
         return SpmmPrep(
             method, g.n,
             {"src": jnp.asarray(ch.src), "dst_local": jnp.asarray(ch.dst_local),
-             "mask": jnp.asarray(ch.mask), "src_tile": jnp.asarray(ch.src_tile),
+             "mask": jnp.asarray(ch.mask, adj_dtype),
+             "src_tile": jnp.asarray(ch.src_tile),
              "dst_tile": jnp.asarray(ch.dst_tile), **fb},
-            {"tile": tile, "n_tiles": ch.n_tiles, "interpret": interpret},
+            {"tile": tile, "n_tiles": ch.n_tiles, "interpret": interpret,
+             "reorder": reorder},
         )
     # pallas_bsr
     gp = g.padded(tile)
     bs = gp.bsr(tile=tile)
     return SpmmPrep(
         method, g.n,
-        {"blocks": jnp.asarray(bs.blocks), "src_tile": jnp.asarray(bs.src_tile),
+        {"blocks": jnp.asarray(bs.blocks, adj_dtype),
+         "src_tile": jnp.asarray(bs.src_tile),
          "dst_tile": jnp.asarray(bs.dst_tile), **fb},
-        {"tile": tile, "n_tiles": bs.n_tiles, "interpret": interpret},
+        {"tile": tile, "n_tiles": bs.n_tiles, "interpret": interpret,
+         "reorder": reorder},
     )
 
 
 def _spmm_segment(m: jnp.ndarray, src, dst, n: int) -> jnp.ndarray:
+    store = m.dtype
+    acc_dt = ema_ops.accum_dtype(store)
     c = m.shape[0]
     e = max(int(src.shape[0]), 1)
     row_chunk = max(1, min(c, _SEGMENT_TARGET_ELEMS // e))
@@ -107,9 +122,11 @@ def _spmm_segment(m: jnp.ndarray, src, dst, n: int) -> jnp.ndarray:
     m_p = m_p.reshape(n_chunks, row_chunk, m.shape[1])
 
     def body(_, chunk):
-        contrib = chunk[:, src]                                   # (rc, E)
+        # sub-f32 storage accumulates its edge sums in f32 (same
+        # storage/accum contract as the kernels) and casts back at the end
+        contrib = chunk[:, src].astype(acc_dt)                    # (rc, E)
         out = jax.ops.segment_sum(contrib.T, dst, num_segments=n)  # (N, rc)
-        return None, out.T
+        return None, out.T.astype(store)
 
     _, out = jax.lax.scan(body, None, m_p)
     return out.reshape(c_pad, m.shape[1])[:c]
@@ -180,7 +197,8 @@ def spmm(m: jnp.ndarray, prep: SpmmPrep, *, c_block: int | None = None,
     if c_block is None:
         if autotune:
             c_block = _autotune.spmm_c_block(
-                m_pad, run, kind=prep.method, interpret=st["interpret"])
+                m_pad, run, kind=prep.method, interpret=st["interpret"],
+                reorder=st.get("reorder", ""))
         else:
             c_block = _pick_c_block(m.shape[0])
     return run(c_block)[:, : m.shape[1]]

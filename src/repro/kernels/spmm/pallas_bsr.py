@@ -25,19 +25,32 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = ["spmm_bsr_pallas"]
 
 
-def _kernel(src_tile_ref, dst_tile_ref, blocks_ref, m_ref, out_ref):
+def _kernel(src_tile_ref, dst_tile_ref, blocks_ref, m_ref, out_ref, acc_ref):
     b = pl.program_id(1)
+    nb = pl.num_programs(1)
+    acc_dtype = acc_ref.dtype
     is_first = jnp.logical_or(
         b == 0, dst_tile_ref[b] != dst_tile_ref[jnp.maximum(b - 1, 0)]
     )
 
     @pl.when(is_first)
     def _zero():
-        out_ref[...] = jnp.zeros_like(out_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    out_ref[...] += jax.lax.dot(
-        m_ref[...], blocks_ref[0], preferred_element_type=out_ref.dtype
+    # partial sums live in the accumulator scratch (f32 for bf16 storage);
+    # the output block is written once, on the tile's last block
+    acc_ref[...] += jax.lax.dot(
+        m_ref[...].astype(acc_dtype), blocks_ref[0].astype(acc_dtype),
+        preferred_element_type=acc_dtype,
     )
+
+    is_last = jnp.logical_or(
+        b == nb - 1, dst_tile_ref[b] != dst_tile_ref[jnp.minimum(b + 1, nb - 1)]
+    )
+
+    @pl.when(is_last)
+    def _store():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
 
 
 @functools.partial(
@@ -63,6 +76,7 @@ def spmm_bsr_pallas(
         m = jnp.pad(m, ((0, c_pad - c), (0, 0)))
     n_blocks = blocks.shape[0]
 
+    from repro.kernels.ema.ops import accum_dtype
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(c_pad // c_block, n_blocks),
@@ -71,6 +85,7 @@ def spmm_bsr_pallas(
             pl.BlockSpec((c_block, tile), lambda cb, b, st, dt: (cb, st[b])),
         ],
         out_specs=pl.BlockSpec((c_block, tile), lambda cb, b, st, dt: (cb, dt[b])),
+        scratch_shapes=[pltpu.VMEM((c_block, tile), accum_dtype(dtype))],
     )
     out = pl.pallas_call(
         _kernel,

@@ -35,10 +35,12 @@ __all__ = ["spmm_gather_pallas"]
 
 def _kernel(src_tile_ref, dst_tile_ref,        # scalar prefetch (SMEM)
             src_ref, dstl_ref, mask_ref, m_ref,  # inputs
-            out_ref):                           # output
+            out_ref,                            # output
+            acc_ref):                           # VMEM accumulator scratch
     t = pl.program_id(1)
+    nc = pl.num_programs(1)
     tile = out_ref.shape[1]
-    dtype = out_ref.dtype
+    acc_dtype = acc_ref.dtype
 
     # Zero the accumulator on the first chunk of each destination tile.
     is_first = jnp.logical_or(
@@ -47,25 +49,35 @@ def _kernel(src_tile_ref, dst_tile_ref,        # scalar prefetch (SMEM)
 
     @pl.when(is_first)
     def _zero():
-        out_ref[...] = jnp.zeros_like(out_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
 
     src = src_ref[0, :]            # (E,) global src ids of this chunk
     dstl = dstl_ref[0, :]          # (E,) local dst offsets
-    mask = mask_ref[0, :]          # (E,) {0,1} in the table dtype
+    mask = mask_ref[0, :].astype(acc_dtype)  # (E,) {0,1}
 
     src_local = src - src_tile_ref[t] * tile
     lane = jax.lax.broadcasted_iota(jnp.int32, (tile, src.shape[0]), 0)
     onehot_src = jnp.where(lane == src_local[None, :], mask[None, :],
-                           jnp.zeros((), dtype))
-    onehot_dst = (lane == dstl[None, :]).astype(dtype)
+                           jnp.zeros((), acc_dtype))
+    onehot_dst = (lane == dstl[None, :]).astype(acc_dtype)
     p = jax.lax.dot_general(
         onehot_src, onehot_dst,
         (((1,), (1,)), ((), ())),
-        preferred_element_type=dtype,
+        preferred_element_type=acc_dtype,
     )                               # (T, T) densified adjacency block
-    out_ref[...] += jax.lax.dot(
-        m_ref[...], p, preferred_element_type=dtype
+    # partial sums in the accumulator dtype (f32 for bf16 storage); the
+    # output block is written once, on the tile's last chunk
+    acc_ref[...] += jax.lax.dot(
+        m_ref[...].astype(acc_dtype), p, preferred_element_type=acc_dtype
     )
+
+    is_last = jnp.logical_or(
+        t == nc - 1, dst_tile_ref[t] != dst_tile_ref[jnp.minimum(t + 1, nc - 1)]
+    )
+
+    @pl.when(is_last)
+    def _store():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
 
 
 @functools.partial(
@@ -85,6 +97,7 @@ def spmm_gather_pallas(
     c_block: int = 256,
     interpret: bool = True,
 ) -> jnp.ndarray:
+    from repro.kernels.ema.ops import accum_dtype
     c, n = m.shape
     assert n == n_tiles * tile, (n, n_tiles, tile)
     dtype = m.dtype
@@ -104,6 +117,7 @@ def spmm_gather_pallas(
             pl.BlockSpec((c_block, tile), lambda cb, t, st, dt: (cb, st[t])),
         ],
         out_specs=pl.BlockSpec((c_block, tile), lambda cb, t, st, dt: (cb, dt[t])),
+        scratch_shapes=[pltpu.VMEM((c_block, tile), accum_dtype(dtype))],
     )
     out = pl.pallas_call(
         _kernel,

@@ -81,6 +81,16 @@ def main(argv=None):
                          "their device arrays and compiled fns")
     ap.add_argument("--fuse", action="store_true",
                     help="enable the fused SpMM->eMA Pallas kernel path")
+    ap.add_argument("--reorder", default=None,
+                    choices=("rcm", "degree"),
+                    help="permute vertices once per engine for BSR "
+                         "locality (rcm: fewer occupied tiles; degree: "
+                         "gather-path balance); results stay in the "
+                         "input vertex ids")
+    ap.add_argument("--dtype", default=None,
+                    choices=("float32", "float64", "bfloat16"),
+                    help="node-table/adjacency storage dtype; bfloat16 "
+                         "halves table bytes and accumulates in float32")
     ap.add_argument("--trace", action="store_true",
                     help="enable span tracing with device-sync timing; "
                          "prints a per-request latency breakdown "
@@ -104,13 +114,21 @@ def main(argv=None):
 
     budget = None if args.memory_budget_mb is None \
         else int(args.memory_budget_mb * 2 ** 20)
+    engine_kw = {}
+    if args.fuse:
+        engine_kw["fuse_spmm_ema"] = True
+    if args.reorder:
+        engine_kw["reorder"] = args.reorder
+    if args.dtype:
+        import jax.numpy as jnp
+        engine_kw["dtype"] = getattr(jnp, args.dtype)
     svc = CountingService(
         ledger_root=args.ledger, round_size=args.round_size,
         default_max_iters=args.iters, batch_size=args.batch_size,
         memory_budget_bytes=budget,
         engine_cache=EngineCache(max_entries=args.engine_cache_size),
         estimate_cache=args.results_cache,
-        engine_kw={"fuse_spmm_ema": True} if args.fuse else None)
+        engine_kw=engine_kw or None)
     svc.add_graph("g", g)
     templates: list = [t for t in args.templates.split(",") if t]
     for i, es in enumerate(args.template_edges):

@@ -84,8 +84,13 @@ class EngineCache:
     @staticmethod
     def key(g: Graph, template, engine: str, plan: str,
             **build_kw) -> tuple:
-        return (g.fingerprint, _template_key(template), engine, plan,
-                tuple(sorted(build_kw.items())))
+        # None-valued options mean "engine default" and must alias the
+        # absent spelling (reorder=None == no reorder kwarg); dtype-like
+        # values key by name so np.float32/jnp.float32 spellings collide
+        opts = tuple(sorted(
+            (k, getattr(v, "__name__", None) or str(v))
+            for k, v in build_kw.items() if v is not None))
+        return (g.fingerprint, _template_key(template), engine, plan, opts)
 
     def get(self, g: Graph, template, engine: str = "pgbsc",
             plan: str = "optimized", **build_kw) -> CountingEngine:

@@ -21,7 +21,7 @@ from repro.graph.coloring import coloring_numpy
 from repro.kernels import autotune
 from repro.kernels.ema.ops import ema_xla
 from repro.kernels.fused import (fused_fits_vmem, fused_spmm_ema,
-                                 prepare_fused)
+                                 fused_spmm_ema_shared, prepare_fused)
 from repro.kernels.fused.pallas_fused import pick_batch_block
 from repro.kernels.spmm.ref import spmm_dense
 
@@ -270,3 +270,190 @@ class TestAutotune:
                          autotune_blocks=True)
         got, _ = e.count_colorful(colors)
         np.testing.assert_allclose(float(got), float(want), rtol=1e-6)
+
+
+class TestSharedPassiveKernel:
+    """One launch, one SpMM leg, N consumers reading the same y tiles."""
+
+    def _inputs(self, g, dtype=np.float32):
+        # two consumers of one passive: (k=5, t=5, ta=3) and (k=5, t=4,
+        # ta=2) — same c_p = C(5,2), different c_a/s/l per consumer
+        rng = np.random.default_rng(11)
+        m_p = _rand_table(rng, (comb(5, 2), g.n), dtype)
+        m_as, ias, ips = [], [], []
+        for t, ta in ((5, 3), (4, 2)):
+            ia, ip = split_tables(5, t, ta)
+            ias.append(jnp.asarray(ia))
+            ips.append(jnp.asarray(ip))
+            m_as.append(_rand_table(rng, (comb(5, ta), g.n), dtype))
+        return m_as, m_p, ias, ips
+
+    @pytest.mark.parametrize("gname", ["er_uneven", "grid", "empty"])
+    def test_matches_oracle_per_consumer(self, gname):
+        g = GRAPHS[gname]()
+        m_as, m_p, ias, ips = self._inputs(g)
+        outs = fused_spmm_ema_shared(m_as, m_p, ias, ips, prepare_fused(g))
+        assert len(outs) == 2
+        for m_a, ia, ip, got in zip(m_as, ias, ips, outs):
+            want = _oracle(g, m_a, m_p, ia, ip)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-6)
+
+    def test_batched(self):
+        g = GRAPHS["er_uneven"]()
+        m_as, m_p, ias, ips = self._inputs(g)
+        b = 3
+        m_p_b = jnp.stack([m_p * (i + 1) for i in range(b)])
+        m_as_b = [jnp.stack([m * (i + 1) for i in range(b)]) for m in m_as]
+        outs = fused_spmm_ema_shared(m_as_b, m_p_b, ias, ips,
+                                     prepare_fused(g))
+        for m_a, ia, ip, got in zip(m_as, ias, ips, outs):
+            assert got.shape[0] == b
+            for i in range(b):
+                want = _oracle(g, m_a * (i + 1), m_p * (i + 1), ia, ip)
+                np.testing.assert_allclose(np.asarray(got[i]),
+                                           np.asarray(want), rtol=1e-6)
+
+    def test_bf16_within_tolerance(self):
+        g = GRAPHS["er_uneven"]()
+        m_as, m_p, ias, ips = self._inputs(g)
+        prep16 = prepare_fused(g, dtype=jnp.bfloat16)
+        outs = fused_spmm_ema_shared(
+            [m.astype(jnp.bfloat16) for m in m_as],
+            m_p.astype(jnp.bfloat16), ias, ips, prep16)
+        for m_a, ia, ip, got in zip(m_as, ias, ips, outs):
+            want = np.asarray(_oracle(g, m_a, m_p, ia, ip), np.float64)
+            err = np.abs(np.asarray(got, np.float64) - want)
+            rel = err / np.maximum(np.abs(want), 1.0)
+            assert rel.max() <= 1e-2
+
+    def test_vmem_overflow_falls_back_exactly(self, monkeypatch):
+        from repro.kernels.fused import ops as fops
+        monkeypatch.setattr(fops, "_PALLAS_VMEM_BYTES", 1 << 12)
+        g = GRAPHS["er_uneven"]()
+        m_as, m_p, ias, ips = self._inputs(g)
+        outs = fused_spmm_ema_shared(m_as, m_p, ias, ips, prepare_fused(g))
+        for m_a, ia, ip, got in zip(m_as, ias, ips, outs):
+            want = _oracle(g, m_a, m_p, ia, ip)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-6)
+
+
+def _shared_passive_bundle():
+    """Two k=5 trees (the same unrooted 'fork', rooted differently) whose
+    dedup plan shares a path2 passive between T1's root and an interior
+    node of T2 — the groupable shape: neither consumer's active is in the
+    pair and T2's root runs after both."""
+    from repro.core.templates import TreeTemplate
+    t1 = TreeTemplate([(0, 1), (1, 2), (0, 3), (0, 4)], root=0,
+                      name="sharedp_a")
+    t2 = TreeTemplate([(0, 1), (1, 2), (2, 3), (1, 4)], root=0,
+                      name="sharedp_b")
+    return (t1, t2)
+
+
+class TestSharedPassiveEngine:
+    def test_group_forms_and_counts_match(self):
+        g = erdos_renyi(80, 6.0, seed=9)
+        bundle = _shared_passive_bundle()
+        base = build_engine(g, bundle, "pgbsc", plan="dedup")
+        shared = build_engine(g, bundle, "pgbsc", plan="dedup",
+                              fuse_spmm_ema=True)
+        assert shared.schedule.fused_groups, "expected a shared group"
+        grp = shared.schedule.fused_groups[0]
+        assert len(grp) == 2
+        assert all(shared.fusion_report[m] == "admitted_shared"
+                   for m in grp)
+        # both group members consume the same passive child
+        passives = {shared.plan.nodes[m].passive for m in grp}
+        assert len(passives) == 1
+        batch = jnp.stack(
+            [jnp.asarray(coloring_numpy(0, i, g.n, 5)) for i in range(3)])
+        want, _ = base.count_colorful_batch(batch)
+        got, _ = shared.count_colorful_batch(batch)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6)
+
+    def test_cols_drop_vs_per_consumer_fusion(self):
+        g = erdos_renyi(80, 6.0, seed=9)
+        shared = build_engine(g, _shared_passive_bundle(), "pgbsc",
+                              plan="dedup", fuse_spmm_ema=True)
+        cols = shared.spmm_cols_per_coloring
+        # per-consumer fusion would re-run the shared passive's SpMM once
+        # per extra member; the group pays it exactly once
+        per_consumer = cols + sum(
+            (len(grp) - 1) * comb(
+                shared.k,
+                shared.plan.nodes[shared.plan.nodes[grp[0]].passive].size)
+            for grp in shared.schedule.fused_groups)
+        assert cols < per_consumer
+        # dispatch accounting follows the model
+        batch = jnp.stack(
+            [jnp.asarray(coloring_numpy(0, i, g.n, 5)) for i in range(2)])
+        shared.count_colorful_batch(batch)
+        assert shared.n_spmm_cols_dispatched == 2 * cols
+
+    def test_cols_not_worse_than_ycache(self):
+        # full-coverage admission: grouping must never dispatch more SpMM
+        # columns than the unfused y-cache walk of the same plan
+        g = erdos_renyi(80, 6.0, seed=9)
+        bundle = _shared_passive_bundle()
+        base = build_engine(g, bundle, "pgbsc", plan="dedup")
+        shared = build_engine(g, bundle, "pgbsc", plan="dedup",
+                              fuse_spmm_ema=True)
+        assert shared.spmm_cols_per_coloring <= base.spmm_cols_per_coloring
+
+    def test_chain_consumers_stay_on_ycache(self):
+        # path-like shared passives are consumed through active chains: a
+        # single launch cannot consume its own outputs, so no group forms
+        g = erdos_renyi(60, 5.0, seed=10)
+        e = build_engine(g, ("u5", "path5", "star5"), "pgbsc",
+                         plan="dedup", fuse_spmm_ema=True)
+        assert not e.schedule.fused_groups
+        assert "admitted_shared" not in e.fusion_report.values()
+
+    def test_bf16_group_engine_within_tolerance(self):
+        g = erdos_renyi(80, 6.0, seed=9)
+        bundle = _shared_passive_bundle()
+        base = build_engine(g, bundle, "pgbsc", plan="dedup")
+        e16 = build_engine(g, bundle, "pgbsc", plan="dedup",
+                           fuse_spmm_ema=True, dtype=jnp.bfloat16,
+                           reorder="rcm")
+        assert e16.schedule.fused_groups
+        batch = jnp.stack(
+            [jnp.asarray(coloring_numpy(0, i, g.n, 5)) for i in range(2)])
+        want, _ = base.count_colorful_batch(batch)
+        got, _ = e16.count_colorful_batch(batch)
+        want = np.asarray(want, np.float64)
+        rel = np.abs(np.asarray(got, np.float64) - want) \
+            / np.maximum(np.abs(want), 1.0)
+        assert rel.max() <= 1e-2
+
+
+class TestBf16Engine:
+    @pytest.mark.parametrize("tname", ["u5", "u7"])
+    @pytest.mark.parametrize("engine", ["fascia", "pfascia", "pgbsc"])
+    def test_counts_within_tolerance(self, tname, engine):
+        g = erdos_renyi(70, 5.0, seed=12)
+        t = get_template(tname)
+        base = build_engine(g, t, engine)
+        e16 = build_engine(g, t, engine, dtype=jnp.bfloat16)
+        batch = jnp.stack(
+            [jnp.asarray(coloring_numpy(0, i, g.n, t.k)) for i in range(2)])
+        want, _ = base.count_colorful_batch(batch)
+        got, _ = e16.count_colorful_batch(batch)
+        want = np.asarray(want, np.float64)
+        rel = np.abs(np.asarray(got, np.float64) - want) \
+            / np.maximum(np.abs(want), 1.0)
+        assert rel.max() <= 1e-2
+
+    def test_fused_bf16_matches_f32_within_tolerance(self):
+        g = erdos_renyi(70, 5.0, seed=12)
+        base = build_engine(g, "u5", "pgbsc")
+        e16 = build_engine(g, "u5", "pgbsc", dtype=jnp.bfloat16,
+                           fuse_spmm_ema=True)
+        assert e16.schedule.fused, "bf16 must stay kernel-eligible"
+        colors = coloring_numpy(0, 0, g.n, 5)
+        want = float(base.count_colorful(colors)[0])
+        got = float(e16.count_colorful(colors)[0])
+        assert abs(got - want) / max(abs(want), 1.0) <= 1e-2

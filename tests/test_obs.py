@@ -222,8 +222,8 @@ class TestKernelCounters:
 
     def test_fusion_report_and_counters(self, registry):
         eng = build_engine(_graph(60), "u5", "pgbsc", fuse_spmm_ema=True)
-        allowed = {"admitted", "dtype_unsupported", "multi_consumer",
-                   "vmem_overflow"}
+        allowed = {"admitted", "admitted_shared", "dtype_unsupported",
+                   "multi_consumer", "vmem_overflow"}
         assert eng.fusion_report                      # every internal node
         assert set(eng.fusion_report.values()) <= allowed
         snap = metrics.snapshot()["counters"]

@@ -1,0 +1,173 @@
+"""Locality reordering: permutation invariance, BSR stats, cache identity.
+
+An engine built with ``reorder=`` must be a drop-in replacement: callers
+pass colorings and read root tables in THEIR vertex ids, and the counts
+match the unreordered engine exactly (the plan walk is a sum over
+automorphism-fixed terms, so a vertex relabeling only reassociates
+floats). RCM must actually help where it can: on a bandable graph with
+scrambled labels it has to cut the number of occupied 128x128 BSR tiles.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import CountQuery, count
+from repro.core import build_engine
+from repro.graph import Graph, erdos_renyi, grid_2d
+from repro.graph.coloring import iteration_key, random_coloring
+from repro.graph.reorder import (ORDERINGS, apply_order, degree_order,
+                                 inverse_order, rcm_order)
+from repro.obs import metrics as _metrics
+from repro.service.cache import EngineCache
+
+
+def _colorings(g, k, b=4, seed=0):
+    return jnp.stack([random_coloring(iteration_key(seed, it), g.n, k)
+                      for it in range(b)])
+
+
+def _scrambled_grid(rows=40, cols=40, seed=3):
+    g = grid_2d(rows, cols)
+    rng = np.random.default_rng(seed)
+    return apply_order(g, rng.permutation(g.n))
+
+
+class TestOrderings:
+    @pytest.mark.parametrize("name", sorted(ORDERINGS))
+    def test_order_is_permutation(self, name):
+        g = erdos_renyi(90, 6.0, seed=1)
+        order = ORDERINGS[name](g)
+        assert sorted(order) == list(range(g.n))
+
+    def test_inverse_order_roundtrip(self):
+        g = erdos_renyi(50, 4.0, seed=2)
+        order = rcm_order(g)
+        inv = inverse_order(order)
+        np.testing.assert_array_equal(order[inv], np.arange(g.n))
+        np.testing.assert_array_equal(inv[order], np.arange(g.n))
+
+    def test_apply_order_rejects_non_permutation(self):
+        g = erdos_renyi(20, 3.0, seed=0)
+        with pytest.raises(ValueError):
+            apply_order(g, np.zeros(g.n, np.int64))
+        with pytest.raises(ValueError):
+            apply_order(g, np.arange(g.n - 1))
+
+    def test_apply_order_preserves_degrees(self):
+        g = erdos_renyi(60, 5.0, seed=4)
+        order = degree_order(g)
+        gp = apply_order(g, order)
+        assert gp.m == g.m
+        np.testing.assert_array_equal(np.asarray(gp.degrees),
+                                      np.asarray(g.degrees)[order])
+
+    def test_apply_order_refreshes_bsr_state(self):
+        # derived state must be recomputed for the new labeling, not
+        # carried over from the source graph
+        g = _scrambled_grid()
+        order = rcm_order(g)
+        gp = apply_order(g, order)
+        assert gp.fingerprint != g.fingerprint
+        s0, s1 = g.bsr_block_stats(), gp.bsr_block_stats()
+        assert s1["occupied_blocks"] != s0["occupied_blocks"]
+
+    def test_rcm_reduces_occupied_blocks_on_bandable_graph(self):
+        g = _scrambled_grid()
+        before = g.bsr_block_stats()
+        after = apply_order(g, rcm_order(g)).bsr_block_stats()
+        assert after["occupied_blocks"] < before["occupied_blocks"]
+        assert after["block_density"] < before["block_density"]
+        assert after["nnz_per_block"] > before["nnz_per_block"]
+
+    def test_block_stats_empty_graph(self):
+        g = Graph.from_edges(100, np.zeros((0, 2), np.int64))
+        s = g.bsr_block_stats()
+        assert s["occupied_blocks"] == 0
+
+
+class TestReorderedEngines:
+    @pytest.mark.parametrize("engine", ["fascia", "pfascia", "pgbsc"])
+    @pytest.mark.parametrize("reorder", sorted(ORDERINGS))
+    def test_counts_invariant_single_and_batched(self, engine, reorder):
+        g = erdos_renyi(110, 6.0, seed=5)
+        base = build_engine(g, "u5", engine=engine)
+        perm = build_engine(g, "u5", engine=engine, reorder=reorder)
+        cols = _colorings(g, base.k, b=3)
+        t0, r0 = base.count_colorful_batch(cols)
+        t1, r1 = perm.count_colorful_batch(cols)
+        np.testing.assert_allclose(np.asarray(t1), np.asarray(t0),
+                                   rtol=1e-6)
+        # root tables come back in the CALLER's vertex ids
+        np.testing.assert_allclose(np.asarray(r1), np.asarray(r0),
+                                   rtol=1e-6)
+        ts, _ = perm.count_colorful(cols[0])
+        np.testing.assert_allclose(np.asarray(ts), np.asarray(t0)[0],
+                                   rtol=1e-6)
+
+    def test_invariant_with_fusion_and_multi_template(self):
+        g = erdos_renyi(100, 6.0, seed=6)
+        bundle = ("u5", "path5", "star5")
+        base = build_engine(g, bundle, engine="pgbsc", plan="dedup")
+        perm = build_engine(g, bundle, engine="pgbsc", plan="dedup",
+                            reorder="rcm", fuse_spmm_ema=True)
+        cols = _colorings(g, base.k, b=3)
+        t0, _ = base.count_colorful_batch(cols)
+        t1, _ = perm.count_colorful_batch(cols)
+        np.testing.assert_allclose(np.asarray(t1), np.asarray(t0),
+                                   rtol=1e-6)
+
+    def test_engine_rejects_unknown_reorder(self):
+        g = erdos_renyi(30, 3.0, seed=0)
+        with pytest.raises(ValueError):
+            build_engine(g, "u3", reorder="nope")
+
+    def test_block_gauges_published(self):
+        reg = _metrics.set_registry(_metrics.MetricsRegistry())
+        try:
+            g = _scrambled_grid()
+            build_engine(g, "u3", engine="pgbsc", reorder="rcm")
+            snap = reg.snapshot()["gauges"]
+            b = snap['reorder_bsr_occupied_blocks{reorder="rcm",'
+                     'stage="before"}']
+            a = snap['reorder_bsr_occupied_blocks{reorder="rcm",'
+                     'stage="after"}']
+            assert a < b
+            assert snap['reorder_bsr_block_density{reorder="rcm",'
+                        'stage="after"}'] > 0
+        finally:
+            _metrics.set_registry(_metrics.MetricsRegistry())
+
+
+class TestReorderIdentity:
+    def test_engine_cache_none_kwarg_aliases_absent(self):
+        g = erdos_renyi(40, 4.0, seed=7)
+        k0 = EngineCache.key(g, "u3", "pgbsc", "optimized")
+        k_none = EngineCache.key(g, "u3", "pgbsc", "optimized", reorder=None)
+        k_rcm = EngineCache.key(g, "u3", "pgbsc", "optimized", reorder="rcm")
+        assert k0 == k_none
+        assert k_rcm != k0
+
+    def test_engine_cache_separates_reorder_and_dtype(self):
+        g = erdos_renyi(40, 4.0, seed=7)
+        cache = EngineCache()
+        e1 = cache.get(g, "u3", reorder="rcm")
+        e2 = cache.get(g, "u3")
+        e3 = cache.get(g, "u3", reorder="rcm")
+        e4 = cache.get(g, "u3", dtype=jnp.bfloat16)
+        assert e1 is e3 and e1 is not e2 and e4 is not e2
+        assert cache.builds == 3
+
+    def test_api_reorder_matches_unreordered(self):
+        g = erdos_renyi(80, 5.0, seed=8)
+        r0 = count(g, "u5", max_iters=6)
+        r1 = count(g, "u5", max_iters=6, reorder="rcm")
+        assert r1.estimate == pytest.approx(r0.estimate, rel=1e-6)
+        assert r1.iterations == r0.iterations
+
+    def test_query_carries_reorder(self):
+        q = CountQuery(templates=("u3",), max_iters=2, reorder="degree")
+        g = erdos_renyi(30, 3.0, seed=9)
+        from repro.api import compile_query
+        cq = compile_query(g, q)
+        assert all(e.reorder == "degree" for e in cq.engines)
