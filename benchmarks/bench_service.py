@@ -1,8 +1,11 @@
-"""Counting-service benchmarks: request throughput and cache-hit speedup.
+"""Counting-service benchmarks: micro rows + a QoS serving load harness.
 
     PYTHONPATH=src python -m benchmarks.run --only service
+    PYTHONPATH=src python -m benchmarks.bench_service --seed 0
+    PYTHONPATH=src python -m benchmarks.bench_service \\
+        --http http://127.0.0.1:8080 --requests 50 --metrics-out SNAP.json
 
-Rows (CSV, via benchmarks.common):
+Micro rows (CSV, via benchmarks.common):
 
 * ``service/cold_first_request``   — engine build + compile + run (the cost
   an uncached tenant pays once per (graph, template, plan)).
@@ -11,34 +14,81 @@ Rows (CSV, via benchmarks.common):
 * ``service/estimate_cache_hit``   — repeat query through the persistent
   estimate cache in a fresh service (no engine build, no dispatch).
 * ``service/throughput_mixed``     — requests/sec over a mixed-template,
-  distinct-seed workload on a warm service (steady-state scheduling +
-  real device work per request).
+  distinct-seed workload on a warm service.
 * ``service/latency_p50|p95|p99``  — mixed-workload request latency
-  percentiles, read from the obs registry's
-  ``service_request_total_seconds`` histogram (the same numbers a
-  ``serve --metrics-out`` snapshot reports).
+  percentiles from ``service_request_total_seconds``.
 
-A machine-readable summary is written to ``BENCH_service.json`` at the
-repo root (committed, so latency drift shows up in review).
+Load harness (``--seed`` makes the class mix and open-loop arrival gaps
+deterministic): the same seeded stream of interactive / batch / deadline
+requests — each class drawing from its own template+seed pools, so
+dispatch groups stay class-pure — is played twice:
+
+* **sync baseline**: submit everything, then the round-barrier ``run()``
+  (every round extends every group, so interactive tail latency is a
+  function of total load);
+* **async**: open-loop arrivals into :class:`AsyncCountingService`
+  (deadline EDF ahead of interactive ahead of batch at every dispatch
+  boundary).
+
+Both runs share one pre-warmed :class:`EngineCache`, so the comparison
+measures *scheduling*, not compiles. Per-class p50/p95/p99, req/s, the
+interactive-p99 speedup, the shed/dropped counts, and a bitwise
+estimate-equality check (async answers must equal the sync baseline's
+exactly — shared streams are deterministic in (seed, iteration id)) all
+land in ``BENCH_service.json`` at the repo root (committed, so drift
+shows up in review).
+
+``--http URL`` switches to a closed-loop driver for a live ``serve
+--http`` server: a worker pool POSTs mixed-class ``/count`` bodies
+(every 5th ``wait:false`` to exercise fire-and-forget + ``/result``
+polling), tallies done/shed/accepted, and writes the server's
+``/metrics.json`` snapshot to ``--metrics-out`` (the CI serving smoke
+validates it with ``repro.obs.validate``).
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
+import random
 import tempfile
+import threading
 import time
 
-from benchmarks.common import emit
+from benchmarks.common import emit, header
 from repro.graph import rmat
 from repro.obs.metrics import (MetricsRegistry, get_registry, set_registry,
                                snapshot)
-from repro.service import CountingService, CountRequest, EstimateCache
+from repro.service import (AsyncCountingService, CountingService,
+                           CountRequest, EngineCache, EstimateCache, QoS)
 
-GRAPH_SCALE = 9           # 512 vertices
+GRAPH_SCALE = 9           # 512 vertices (micro rows)
 EDGE_FACTOR = 16
 TEMPLATES = ("u3", "u5", "path4", "star4")
 REQUESTS_PER_TEMPLATE = 4
+
+# ---------------------------------------------------------- load harness
+LOAD_GRAPH_SCALE = 8      # 256 vertices: ~14 class-pure groups, real work
+LOAD_REQUESTS = 1000
+ROUND_SIZE = 8            # caps below are multiples => stable dispatch shape
+
+# Each class owns its template + seed pools: requests of different classes
+# never share a dispatch group, so QoS ordering is visible end to end.
+# Caps are multiples of ROUND_SIZE and contracts are uniform per class, so
+# every member of a group retires at the same iteration count — the
+# bitwise sync/async comparison then holds per request, not just per group.
+WORKLOAD = {
+    "interactive": dict(weight=0.50, templates=("u3", "path4"),
+                        seeds=(0, 1, 2, 3), rel_stderr=0.15, max_iters=24,
+                        tenants=("alice", "bob"), deadline_s=None),
+    "batch": dict(weight=0.35, templates=("u5", "star4"),
+                  seeds=(10, 11), rel_stderr=0.05, max_iters=48,
+                  tenants=("etl",), deadline_s=None),
+    "deadline": dict(weight=0.15, templates=("u3",), seeds=(20, 21),
+                     rel_stderr=None, max_iters=16, tenants=("sla",),
+                     deadline_s=10.0),
+}
 
 
 def _run_one(svc, template, rel=0.1, seed=0):
@@ -47,11 +97,9 @@ def _run_one(svc, template, rel=0.1, seed=0):
     return svc.result(rid)
 
 
-def run() -> dict:
-    # fresh registry: this benchmark owns its counters/histograms
-    set_registry(MetricsRegistry())
+# ------------------------------------------------------------ micro rows
+def _micro(out: dict) -> None:
     g = rmat(GRAPH_SCALE, EDGE_FACTOR, seed=0)
-    out: dict = {}
 
     # cold vs warm on one template --------------------------------------
     fd, est_path = tempfile.mkstemp(suffix=".json", prefix="pgbsc_bench_est_")
@@ -109,33 +157,298 @@ def run() -> dict:
     for label, v in pcts.items():
         emit(f"service/latency_{label}", v * 1e6, f"n={hist.count}")
         out[f"latency_{label}_ms"] = v * 1e3
+    out["latency_ms"] = {label: v * 1e3 for label, v in pcts.items()}
+    out["requests_mixed"] = n_req
+    out["service_stats"] = warm_svc.stats()
 
     st = warm_svc.stats()
     print(f"# warm service: {st['engine_cache']['builds']} builds / "
           f"{st['requests']} requests, "
           f"{st['unique_iterations']} device iterations", flush=True)
 
-    summary = {
-        "bench": "service",
-        "graph": f"rmat:{GRAPH_SCALE} x{EDGE_FACTOR}",
-        "templates": list(TEMPLATES),
-        "requests_mixed": n_req,
-        "cold_s": out["cold_s"], "warm_s": out["warm_s"],
-        "estimate_hit_s": out["estimate_hit_s"],
-        "req_per_s": out["req_per_s"],
-        "latency_ms": {label: v * 1e3 for label, v in pcts.items()},
-        "service_stats": st,
-        "metrics_snapshot": snapshot(),
+
+# ----------------------------------------------------------- load harness
+def _make_workload(seed: int, n: int) -> list[tuple]:
+    """Deterministic request stream: ``(class, CountRequest, QoS, gap_s)``
+    per entry; the gap is the open-loop inter-arrival sleep."""
+    rng = random.Random(seed)
+    classes = list(WORKLOAD)
+    weights = [WORKLOAD[c]["weight"] for c in classes]
+    out = []
+    for _ in range(n):
+        cls = rng.choices(classes, weights)[0]
+        w = WORKLOAD[cls]
+        req = CountRequest("g", rng.choice(w["templates"]),
+                           rel_stderr=w["rel_stderr"],
+                           max_iters=w["max_iters"],
+                           seed=rng.choice(w["seeds"]))
+        qos = QoS(klass=cls, tenant=rng.choice(w["tenants"]),
+                  deadline_s=w["deadline_s"])
+        out.append((cls, req, qos, rng.expovariate(2000.0)))
+    return out
+
+
+def _pcts(xs: list[float]) -> dict:
+    if not xs:
+        return {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    s = sorted(xs)
+    return {p: s[min(len(s) - 1, int(q * len(s)))]
+            for p, q in (("p50", 0.50), ("p95", 0.95), ("p99", 0.99))}
+
+
+def _latency_s(res) -> float:
+    # estimate-cache hits resolve inside submit(): effectively zero latency
+    return 0.0 if res.from_cache else res.breakdown["total_s"]
+
+
+def _per_class(work, svc, rids) -> tuple[dict, dict, int]:
+    """(per-class percentile dict, per-rid results, dropped count)."""
+    by_cls: dict[str, list[float]] = {c: [] for c in WORKLOAD}
+    results, dropped = {}, 0
+    for (cls, _req, _qos, _gap), rid in zip(work, rids):
+        st = svc.status(rid)
+        if st.value != "done":
+            dropped += 1
+            continue
+        res = svc.result(rid)
+        results[rid] = res
+        by_cls[cls].append(_latency_s(res))
+    pc = {c: dict(_pcts(xs), n=len(xs)) for c, xs in by_cls.items()}
+    return pc, results, dropped
+
+
+def _prewarm(g, engine_cache) -> None:
+    """Absorb engine builds + jit compiles once, outside both timed runs
+    (same ROUND_SIZE => same dispatch shapes as the measured workload)."""
+    svc = CountingService(round_size=ROUND_SIZE, engine_cache=engine_cache)
+    svc.add_graph("g", g)
+    for w in WORKLOAD.values():
+        for t in w["templates"]:
+            svc.submit(CountRequest("g", t, max_iters=ROUND_SIZE,
+                                    seed=w["seeds"][0]))
+    svc.run()
+
+
+def _load_harness(out: dict, seed: int, n_requests: int) -> None:
+    g = rmat(LOAD_GRAPH_SCALE, EDGE_FACTOR, seed=0)
+    work = _make_workload(seed, n_requests)
+    cache = EngineCache()
+    _prewarm(g, cache)
+
+    # sync baseline: round barrier over the full backlog ----------------
+    ssvc = CountingService(round_size=ROUND_SIZE, engine_cache=cache)
+    ssvc.add_graph("g", g)
+    t0 = time.perf_counter()
+    srids = [ssvc.submit(req) for _cls, req, _qos, _gap in work]
+    ssvc.run()
+    swall = time.perf_counter() - t0
+    spc, sres, sdrop = _per_class(work, ssvc, srids)
+
+    # async: open-loop arrivals into the QoS dispatcher -----------------
+    asvc = AsyncCountingService(
+        round_size=ROUND_SIZE, engine_cache=cache,
+        max_queue_depth=2 * n_requests + 16, idle_wait_s=0.005)
+    asvc.add_graph("g", g)
+    arids = []
+    t0 = time.perf_counter()
+    with asvc:
+        for _cls, req, qos, gap in work:
+            if gap > 0:
+                time.sleep(gap)
+            arids.append(asvc.submit(req, qos=qos))
+        asvc.drain(timeout=900.0)
+    awall = time.perf_counter() - t0
+    apc, ares, adrop = _per_class(work, asvc, arids)
+    shed = asvc.stats()["shed"]
+
+    # acceptance: bitwise-equal estimates, no drops, interactive p99 win
+    bitwise = len(sres) == len(ares) == n_requests and all(
+        sres[sr].estimate == ares[ar].estimate
+        and sres[sr].stderr == ares[ar].stderr
+        and sres[sr].iterations == ares[ar].iterations
+        for sr, ar in zip(srids, arids))
+    accept = {
+        "interactive_p99_async_lt_sync":
+            apc["interactive"]["p99"] < spc["interactive"]["p99"],
+        "zero_dropped": sdrop == 0 and adrop == 0 and shed == 0,
+        "bitwise_equal_estimates": bitwise,
     }
+
+    emit("service/load_sync_wall", swall * 1e6,
+         f"req_per_s={n_requests / swall:.1f}")
+    emit("service/load_async_wall", awall * 1e6,
+         f"req_per_s={n_requests / awall:.1f}")
+    for cls in WORKLOAD:
+        emit(f"service/load_sync_{cls}_p99", spc[cls]["p99"] * 1e6,
+             f"n={spc[cls]['n']}")
+        emit(f"service/load_async_{cls}_p99", apc[cls]["p99"] * 1e6,
+             f"n={apc[cls]['n']}")
+    speedup = spc["interactive"]["p99"] / max(apc["interactive"]["p99"],
+                                              1e-9)
+    emit("service/load_interactive_p99_speedup", speedup, "sync/async")
+    for k, ok in accept.items():
+        print(f"# acceptance {k}: {'PASS' if ok else 'FAIL'}", flush=True)
+
+    out["load"] = {
+        "seed": seed,
+        "graph": f"rmat:{LOAD_GRAPH_SCALE} x{EDGE_FACTOR}",
+        "requests": n_requests,
+        "class_mix": {c: sum(1 for cls, *_ in work if cls == c)
+                      for c in WORKLOAD},
+        "cached_async": sum(1 for r in ares.values() if r.from_cache),
+        "sync": {"wall_s": swall, "req_per_s": n_requests / swall,
+                 "per_class_latency_s": spc, "dropped": sdrop},
+        "async": {"wall_s": awall, "req_per_s": n_requests / awall,
+                  "per_class_latency_s": apc, "dropped": adrop,
+                  "shed": shed},
+        "interactive_p99_speedup": speedup,
+        "acceptance": accept,
+    }
+
+
+def run(seed: int = 0, n_requests: int = LOAD_REQUESTS,
+        skip_micro: bool = False) -> dict:
+    # fresh registry: this benchmark owns its counters/histograms
+    set_registry(MetricsRegistry())
+    out: dict = {"bench": "service",
+                 "graph": f"rmat:{GRAPH_SCALE} x{EDGE_FACTOR}",
+                 "templates": list(TEMPLATES)}
+    if not skip_micro:
+        _micro(out)
+    _load_harness(out, seed, n_requests)
+    out["metrics_snapshot"] = snapshot()
+
     path = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "BENCH_service.json")
     with open(path, "w") as f:
-        json.dump(summary, f, indent=1, sort_keys=True)
+        json.dump(out, f, indent=1, sort_keys=True)
     print(f"# wrote {path}", flush=True)
     return out
 
 
-if __name__ == "__main__":
-    from benchmarks.common import header
+# ------------------------------------------------------- HTTP (CI) driver
+def _http_body(rng: random.Random, i: int) -> dict:
+    classes = list(WORKLOAD)
+    cls = rng.choices(classes, [WORKLOAD[c]["weight"] for c in classes])[0]
+    w = WORKLOAD[cls]
+    qos = {"class": cls, "tenant": rng.choice(w["tenants"])}
+    if w["deadline_s"] is not None:
+        qos["deadline_s"] = w["deadline_s"]
+    return {"graph": "g", "templates": [rng.choice(w["templates"])],
+            "max_iters": 8, "seed": rng.choice(w["seeds"]), "qos": qos,
+            # every 5th request is fire-and-forget: exercises 202 +
+            # /result polling while keeping most latencies measurable
+            "wait": (i % 5 != 0), "timeout_s": 120}
+
+
+def _http_drive(url: str, n: int, seed: int, workers: int,
+                metrics_out: str | None) -> int:
+    import urllib.error
+    import urllib.request
+
+    url = url.rstrip("/")
+    rng = random.Random(seed)
+    bodies = [_http_body(rng, i) for i in range(n)]
+    tally = {"done": 0, "shed": 0, "accepted": 0, "failed": 0, "error": 0}
+    poll_rids: list[str] = []
+    lock = threading.Lock()
+    cursor = [0]
+
+    def post(body: dict) -> None:
+        req = urllib.request.Request(
+            url + "/count", data=json.dumps(body).encode(),
+            headers={"Content-Type": "application/json"})
+        try:
+            with urllib.request.urlopen(req, timeout=180) as resp:
+                payload = json.load(resp)
+        except urllib.error.HTTPError as e:     # 429 all-shed is expected
+            payload = json.load(e)
+        except Exception as exc:
+            with lock:
+                tally["error"] += 1
+            print(f"# http error: {exc}", flush=True)
+            return
+        with lock:
+            for ent in payload.get("requests", []):
+                st = ent.get("status")
+                if st in ("done", "shed", "failed"):
+                    tally[st] += 1
+                else:
+                    tally["accepted"] += 1
+                    poll_rids.append(ent["id"])
+
+    def worker() -> None:              # closed loop: next request on finish
+        while True:
+            with lock:
+                if cursor[0] >= len(bodies):
+                    return
+                body = bodies[cursor[0]]
+                cursor[0] += 1
+            post(body)
+
+    threads = [threading.Thread(target=worker, daemon=True)
+               for _ in range(workers)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+
+    for rid in poll_rids[:10]:         # fire-and-forget followup path
+        try:
+            with urllib.request.urlopen(f"{url}/result/{rid}",
+                                        timeout=30) as resp:
+                json.load(resp)
+        except urllib.error.HTTPError:
+            pass                       # 429 (shed) is a valid terminal read
+
+    snap = None
+    try:
+        with urllib.request.urlopen(url + "/metrics.json",
+                                    timeout=30) as resp:
+            snap = json.load(resp)
+    except Exception as exc:
+        print(f"# metrics.json fetch failed: {exc}", flush=True)
+        tally["error"] += 1
+    if metrics_out and snap is not None:
+        with open(metrics_out, "w") as f:
+            json.dump(snap, f, indent=1, sort_keys=True)
+        print(f"# wrote {metrics_out}", flush=True)
+
+    print(f"# http drive: {n} requests in {wall:.2f}s "
+          f"({n / wall:.1f} req/s) -> {tally}", flush=True)
+    return 1 if tally["error"] else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="counting-service benchmark / serving load generator")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="class mix + arrival times are deterministic in "
+                         "this seed")
+    ap.add_argument("--requests", type=int, default=None,
+                    help=f"load-harness request count (default "
+                         f"{LOAD_REQUESTS}; 50 in --http mode)")
+    ap.add_argument("--http", metavar="URL",
+                    help="drive a live serve --http server instead of the "
+                         "in-process harness")
+    ap.add_argument("--workers", type=int, default=8,
+                    help="closed-loop worker threads in --http mode")
+    ap.add_argument("--metrics-out", metavar="PATH",
+                    help="--http mode: write the server's /metrics.json "
+                         "snapshot here")
+    ap.add_argument("--skip-micro", action="store_true",
+                    help="skip the micro rows; run only the load harness")
+    args = ap.parse_args(argv)
+    if args.http:
+        return _http_drive(args.http, args.requests or 50, args.seed,
+                           args.workers, args.metrics_out)
     header()
-    run()
+    run(seed=args.seed, n_requests=args.requests or LOAD_REQUESTS,
+        skip_micro=args.skip_micro)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

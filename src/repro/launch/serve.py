@@ -4,6 +4,20 @@
         --graph rmat:10 --templates u5,u7,path9 --rel-stderr 0.05 \\
         --template-edges "0-1,1-2,1-3@0"
 
+Two modes share every engine/cache/obs flag:
+
+* **batch** (default): each template becomes one request, the synchronous
+  round scheduler drives them to completion, results print and the
+  process exits.
+* **serving** (``--http PORT``): starts the continuously-admitting
+  :class:`~repro.service.async_loop.AsyncCountingService` plus the
+  stdlib HTTP/JSON front end (``POST /count``, ``GET /result/<id>``,
+  ``/metrics``, ``/metrics.json``, ``/healthz``) and runs until
+  SIGINT/SIGTERM. ``--templates`` are pre-warmed into the engine pool so
+  the first interactive request never pays a cold compile;
+  ``--queue-depth`` bounds admission (overflow requests are shed with
+  HTTP 429). ``--metrics-out`` writes the final snapshot on shutdown.
+
 Each template in ``--templates`` becomes one service request (repeats are
 real repeated requests — they exercise the engine cache and dispatch-group
 sharing); names accept the registry plus dynamic ``path{k}`` / ``star{k}``
@@ -44,6 +58,54 @@ def _load_graph(spec: str, edge_list: str | None):
         n = int(arg or 1000)
         return erdos_renyi(n, 8.0, seed=0)
     raise ValueError(f"unknown graph spec {spec!r}")
+
+
+def _serve_http(args, g, budget, engine_kw) -> int:
+    """Serving mode: async QoS service + HTTP front end until SIGINT."""
+    import signal
+    import threading
+
+    from repro.service import AsyncCountingService
+    from repro.service.frontend import serve_forever
+
+    svc = AsyncCountingService(
+        ledger_root=args.ledger, round_size=args.round_size,
+        default_max_iters=args.iters, batch_size=args.batch_size,
+        memory_budget_bytes=budget,
+        engine_cache=EngineCache(max_entries=args.engine_cache_size),
+        estimate_cache=args.results_cache,
+        engine_kw=engine_kw or None,
+        max_queue_depth=args.queue_depth,
+        warm_pool=not args.no_warm_pool)
+    svc.add_graph("g", g)
+    # pre-warm the advertised templates: cold build+compile lands here,
+    # on startup/idle time, never on the first interactive request
+    for tpl in [t for t in args.templates.split(",") if t]:
+        svc.prewarm("g", tpl, args.engine, args.plan)
+    for i, es in enumerate(args.template_edges):
+        svc.prewarm("g", TemplateSpec.from_edge_string(es, name=f"edges{i}"),
+                    args.engine, args.plan)
+    httpd = serve_forever(svc, host=args.host, port=args.http)
+    host, port = httpd.server_address[:2]
+    print(f"serving HTTP on {host}:{port} (graph 'g', queue depth "
+          f"{args.queue_depth}); POST /count, GET /result/<id>, "
+          f"/metrics, /metrics.json, /healthz", flush=True)
+    stop = threading.Event()
+    for sig in (signal.SIGINT, signal.SIGTERM):
+        signal.signal(sig, lambda *_: stop.set())
+    try:
+        stop.wait()
+    finally:
+        print("shutting down...", flush=True)
+        httpd.shutdown()
+        svc.close()
+        if args.metrics_out:
+            snap = obs_metrics.snapshot()
+            validate_snapshot(snap)
+            with open(args.metrics_out, "w") as f:
+                json.dump(snap, f, indent=1, sort_keys=True)
+            print(f"metrics snapshot -> {args.metrics_out}", flush=True)
+    return 0
 
 
 def main(argv=None):
@@ -101,6 +163,18 @@ def main(argv=None):
     ap.add_argument("--profile-dir", default=None, metavar="DIR",
                     help="arm a one-shot jax.profiler trace around the "
                          "first device dispatch, written to DIR")
+    ap.add_argument("--http", type=int, default=None, metavar="PORT",
+                    help="serving mode: run the async QoS service behind "
+                         "an HTTP/JSON front end on PORT until SIGINT "
+                         "(0 = ephemeral port, printed on startup)")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="bind address for --http")
+    ap.add_argument("--queue-depth", type=int, default=1024,
+                    help="async admission-queue bound; overflow requests "
+                         "are shed (HTTP 429 / status SHED)")
+    ap.add_argument("--no-warm-pool", action="store_true",
+                    help="disable idle-time engine pre-materialization "
+                         "in serving mode")
     args = ap.parse_args(argv)
 
     if args.trace:
@@ -122,6 +196,8 @@ def main(argv=None):
     if args.dtype:
         import jax.numpy as jnp
         engine_kw["dtype"] = getattr(jnp, args.dtype)
+    if args.http is not None:
+        return _serve_http(args, g, budget, engine_kw)
     svc = CountingService(
         ledger_root=args.ledger, round_size=args.round_size,
         default_max_iters=args.iters, batch_size=args.batch_size,

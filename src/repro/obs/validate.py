@@ -4,11 +4,15 @@ Library: :func:`validate_snapshot` raises ``ValueError`` with a pointed
 message on the first violation. CLI (the CI obs-smoke step)::
 
     python -m repro.obs.validate SNAPSHOT.json \\
-        --require-nonzero fusion --require-nonzero cache
+        --require-nonzero fusion --require-nonzero cache \\
+        --require-hist 'qos='
 
 ``--require-nonzero PREFIX`` additionally demands at least one counter
 whose name starts with (or contains) ``PREFIX`` with a nonzero value —
 the smoke check that the instrumented paths actually ran.
+``--require-hist PREFIX`` does the same for histograms (at least one
+matching histogram with ``count > 0``), e.g. the per-QoS-class latency
+histograms the serving smoke asserts on.
 """
 
 from __future__ import annotations
@@ -77,6 +81,10 @@ def main(argv=None) -> int:
                     metavar="PREFIX",
                     help="demand >=1 nonzero counter whose key contains "
                          "PREFIX (repeatable)")
+    ap.add_argument("--require-hist", action="append", default=[],
+                    metavar="PREFIX",
+                    help="demand >=1 histogram whose key contains PREFIX "
+                         "with count > 0 (repeatable)")
     args = ap.parse_args(argv)
     with open(args.snapshot) as f:
         snap = json.load(f)
@@ -89,6 +97,15 @@ def main(argv=None) -> int:
                   file=sys.stderr)
             return 1
         print(f"ok: {prefix!r} -> {len(hits)} nonzero counter(s), e.g. "
+              f"{next(iter(hits))}")
+    for prefix in args.require_hist:
+        hits = {k: h for k, h in snap["histograms"].items()
+                if prefix in k and h["count"] > 0}
+        if not hits:
+            print(f"FAIL: no populated histogram matching {prefix!r}",
+                  file=sys.stderr)
+            return 1
+        print(f"ok: {prefix!r} -> {len(hits)} populated histogram(s), e.g. "
               f"{next(iter(hits))}")
     n = (len(snap["counters"]), len(snap["gauges"]), len(snap["histograms"]))
     print(f"valid snapshot: {n[0]} counters, {n[1]} gauges, "

@@ -36,6 +36,19 @@ Request lifecycle
    answers feed the estimate cache for future tenants. ``FAILED`` (bad
    engine / build error) and ``CANCELLED`` are the other terminal states.
 
+Two front ends share this machinery:
+
+* :class:`~repro.service.scheduler.CountingService` — the synchronous
+  round scheduler (`run()`), right for offline batch jobs where all
+  requests are known up front;
+* :class:`~repro.service.async_loop.AsyncCountingService` — a
+  continuously-admitting dispatcher thread with QoS classes
+  (interactive / batch / deadline), per-tenant weighted fairness,
+  bounded-queue backpressure with load shedding (``SHED``), and warm
+  engine pools; `repro.service.frontend` puts an HTTP/JSON API on top.
+  Estimates are bitwise-identical between the two (samples are
+  deterministic functions of ``(seed, iteration id)``).
+
 Typical use::
 
     from repro.service import CountingService, CountRequest
@@ -48,13 +61,16 @@ Typical use::
         print(rid, res.estimate, "+-", res.stderr, res.ci95)
 """
 
+from repro.service.async_loop import AsyncCountingService
 from repro.service.cache import EngineCache, EstimateCache
+from repro.service.qos import AdmissionQueue, FairScheduler, QoS, QoSClass
 from repro.service.requests import (CountRequest, RequestResult,
                                     RequestStatus, RunningStat)
 from repro.service.scheduler import CountingService
 
 __all__ = [
-    "CountingService",
+    "CountingService", "AsyncCountingService",
     "CountRequest", "RequestResult", "RequestStatus", "RunningStat",
     "EngineCache", "EstimateCache",
+    "QoS", "QoSClass", "FairScheduler", "AdmissionQueue",
 ]

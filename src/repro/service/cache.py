@@ -23,9 +23,17 @@ crashed on — so a stale name key can't alias a canonical-hash key.
 
 from __future__ import annotations
 
+import contextlib
 import json
 import os
+import tempfile
+import threading
 from collections import OrderedDict
+
+try:                              # POSIX advisory file lock; absent on
+    import fcntl                  # platforms where flock is unavailable
+except ImportError:               # (the cache degrades to atomic-replace-
+    fcntl = None                  # only, which is still torn-write-safe)
 
 from repro.core import build_engine
 from repro.core.engines import CountingEngine
@@ -120,6 +128,14 @@ class EngineCache:
                 _metrics.counter("engine_cache_evictions_total").inc()
         return eng
 
+    def has(self, g: Graph, template, engine: str = "pgbsc",
+            plan: str = "optimized", **build_kw) -> bool:
+        """Whether this exact engine is cache-resident — a pure probe: no
+        build, no LRU refresh (the async warm pool uses it to decide what
+        to pre-materialize without perturbing eviction order)."""
+        return self.key(g, template, engine, plan, **build_kw) \
+            in self._engines
+
     def resident_ids(self) -> set[int]:
         """``id()`` of cache-managed engine objects — the set whose device
         residency ``max_entries`` bounds (used by the service to avoid
@@ -139,36 +155,84 @@ class EstimateCache:
     """Persistent map from request identity to a finished estimate.
 
     Entries: ``{estimate, stderr, rel_stderr, iterations}``. ``path=None``
-    keeps the cache in-memory (tests / ephemeral services). Writes replace
-    the JSON file atomically, matching the runner-ledger durability story.
-    The on-disk form is ``{"schema": SCHEMA_VERSION, "entries": {...}}``;
-    files with a different (or missing — pre-versioning) schema are
-    silently treated as empty, because their keys used template *names*
-    and must not alias today's canonical-hash keys.
+    keeps the cache in-memory (tests / ephemeral services). The on-disk
+    form is ``{"schema": SCHEMA_VERSION, "entries": {...}}``; files with a
+    different (or missing — pre-versioning) schema are silently treated as
+    empty, because their keys used template *names* and must not alias
+    today's canonical-hash keys.
+
+    **Concurrency.** The cache is safe for concurrent writers — both the
+    async front end's threads inside one process and independent service
+    processes sharing one file:
+
+    * every write goes to a uniquely-named temp file in the target
+      directory and lands via ``os.replace`` — a crashed or preempted
+      writer can tear its temp file, never the cache;
+    * the whole read-modify-write is serialized under an exclusive
+      ``flock`` on a ``<path>.lock`` sidecar (plus an in-process mutex),
+      and *merges* with the entries on disk before replacing — two
+      processes writing disjoint keys both survive, and for a contended
+      key the entry with more iterations wins (the same
+      keep-the-tighter-answer policy the scheduler applies).
     """
 
     def __init__(self, path: str | None = None):
         self.path = path
         self._mem: dict[str, dict] = {}
+        self._tlock = threading.Lock()
         self.hits = 0
         self.misses = 0
         self.writes = 0
         self.invalidations = 0
-        if path and os.path.isfile(path):
+        if path:
+            with self._file_lock():
+                self._mem = self._read_disk()
+
+    # ------------------------------------------------------- file locking
+    @contextlib.contextmanager
+    def _file_lock(self):
+        """Exclusive advisory lock on ``<path>.lock`` (no-op when the cache
+        is memory-only or flock is unavailable)."""
+        if not self.path or fcntl is None:
+            yield
+            return
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        with open(self.path + ".lock", "a+") as lf:
+            fcntl.flock(lf, fcntl.LOCK_EX)
             try:
-                with open(path) as f:
-                    data = json.load(f)
-            except (OSError, json.JSONDecodeError):
-                data = None
-            if (isinstance(data, dict)
-                    and data.get("schema") == SCHEMA_VERSION
-                    and isinstance(data.get("entries"), dict)):
-                self._mem = data["entries"]
-            else:
-                # stale schema / unreadable file: discarded, not crashed on
-                self.invalidations += 1
-                _metrics.counter("estimate_cache_invalidations_total",
-                                 reason="schema").inc()
+                yield
+            finally:
+                fcntl.flock(lf, fcntl.LOCK_UN)
+
+    def _read_disk(self) -> dict[str, dict]:
+        """Entries currently on disk (empty on stale schema / unreadable /
+        missing file — discarded, never crashed on)."""
+        if not self.path or not os.path.isfile(self.path):
+            return {}
+        try:
+            with open(self.path) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            data = None
+        if (isinstance(data, dict)
+                and data.get("schema") == SCHEMA_VERSION
+                and isinstance(data.get("entries"), dict)):
+            return data["entries"]
+        self.invalidations += 1
+        _metrics.counter("estimate_cache_invalidations_total",
+                         reason="schema").inc()
+        return {}
+
+    @staticmethod
+    def _merge(into: dict[str, dict], new: dict[str, dict]) -> dict:
+        """Overlay ``new`` on ``into``; on key conflict the entry with more
+        iterations wins (ties keep ``new``)."""
+        for k, ent in new.items():
+            prev = into.get(k)
+            if prev is None or prev.get("iterations", 0) <= \
+                    ent.get("iterations", 0):
+                into[k] = ent
+        return into
 
     @staticmethod
     def key(graph_fingerprint: str, template, engine: str, plan: str,
@@ -210,15 +274,30 @@ class EstimateCache:
         return ent if ent["iterations"] >= (max_iters or 0) else None
 
     def put(self, key: str, entry: dict) -> None:
-        self._mem[key] = entry
-        self.writes += 1
-        _metrics.counter("estimate_cache_writes_total").inc()
-        if self.path:
-            os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
-            tmp = self.path + ".tmp"
-            with open(tmp, "w") as f:
-                json.dump({"schema": SCHEMA_VERSION, "entries": self._mem}, f)
-            os.replace(tmp, self.path)
+        with self._tlock:
+            self._merge(self._mem, {key: entry})
+            self.writes += 1
+            _metrics.counter("estimate_cache_writes_total").inc()
+            if not self.path:
+                return
+            with self._file_lock():
+                # merge with what concurrent writers already landed, so
+                # interleaved puts from other threads/processes are never
+                # lost — then replace atomically via a unique temp file
+                self._mem = self._merge(self._read_disk(), self._mem)
+                d = os.path.dirname(self.path) or "."
+                os.makedirs(d, exist_ok=True)
+                fd, tmp = tempfile.mkstemp(
+                    dir=d, prefix=os.path.basename(self.path) + ".")
+                try:
+                    with os.fdopen(fd, "w") as f:
+                        json.dump({"schema": SCHEMA_VERSION,
+                                   "entries": self._mem}, f)
+                    os.replace(tmp, self.path)
+                except BaseException:
+                    with contextlib.suppress(OSError):
+                        os.unlink(tmp)
+                    raise
 
     def __len__(self) -> int:
         return len(self._mem)

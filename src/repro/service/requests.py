@@ -19,6 +19,13 @@ narrative)::
         \\          \\-----> FAILED
          \\---------------> DONE       (served from the estimate cache)
           \\--------------> CANCELLED  (cancel() before completion)
+           \\-------------> SHED       (admission control rejected it)
+
+``SHED`` is terminal at submission time: the async front end's admission
+control refused the request (bounded queue full, modeled memory over
+budget) instead of letting it degrade everyone else's tail latency. The
+shed reason travels in the request's ``error`` field and in the
+``service_shed_total{reason}`` counter.
 """
 
 from __future__ import annotations
@@ -38,6 +45,7 @@ class RequestStatus(str, enum.Enum):
     DONE = "done"             # precision target met, cap reached, or cached
     FAILED = "failed"         # engine build / dispatch raised
     CANCELLED = "cancelled"   # withdrawn by the client
+    SHED = "shed"             # rejected by admission control (backpressure)
 
 
 @dataclasses.dataclass

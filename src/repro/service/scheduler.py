@@ -202,6 +202,13 @@ class CountingService:
         return st.result
 
     def cancel(self, rid: str) -> None:
+        """Withdraw a request. Cancelling the last live member of a group
+        drains the group *before* the next round, not after: every round
+        re-checks liveness immediately before dispatching
+        (:meth:`_plan_dispatch`), so a drained group never costs another
+        device dispatch. A dispatch already in flight when the cancel
+        lands still completes and flushes its runner-ledger checkpoint —
+        those samples are real work and serve any future joiner."""
         st = self._requests[rid]
         if st.status in (RequestStatus.PENDING, RequestStatus.RUNNING):
             st.status = RequestStatus.CANCELLED
@@ -209,6 +216,44 @@ class CountingService:
                              status="cancelled").inc()
 
     # ----------------------------------------------------------- scheduling
+    def _build_group(self, st: _ReqState) -> tuple[_Group, float]:
+        """Construct the dispatch group for ``st``'s request: engine build
+        (or cache hit) plus ledger resume. This is the slow half of attach
+        — the async front end runs it outside its admission lock so a cold
+        compile never blocks new submissions. Returns ``(group,
+        build_seconds)``; the caller registers the group."""
+        g = self.graphs[st.request.graph]
+        spec = st.request.spec
+        t = spec.tree
+        key = st.request.group_key(g.fingerprint)
+        t_build = time.perf_counter()
+        eng = self.engine_cache.get(
+            g, spec, st.request.engine,
+            st.request.plan, **self.engine_kw)
+        build_s = time.perf_counter() - t_build
+        scale = 1.0 / (t.automorphisms * colorful_probability(t.k))
+        # canonical hash, not name: two spellings of one tree resume
+        # the same ledger
+        ledger_dir = os.path.join(
+            self.ledger_root,
+            f"{g.fingerprint[:12]}_{spec.canonical_hash}_"
+            f"{st.request.engine}_{st.request.plan}_s{st.request.seed}")
+        runner = EstimatorRunner(
+            engine_counter(eng, seed=st.request.seed,
+                           batch_size=self.batch_size),
+            k=t.k, automorphisms=t.automorphisms, n_iterations=None,
+            ledger_dir=ledger_dir,
+            checkpoint_every=self.checkpoint_every,
+            seed=st.request.seed)
+        # resume: ledgered contiguous prefix becomes instant history
+        led = runner.completed_iterations()
+        history: list[float] = []
+        while len(history) in led:
+            history.append(led[len(history)] * scale)
+        return _Group(key=key, graph_name=st.request.graph, runner=runner,
+                      engine=eng, scale=scale, history=history,
+                      cursor=len(history), members=[]), build_s
+
     def _attach(self, rid: str, st: _ReqState) -> None:
         t_start = time.perf_counter()
         st.queue_s = max(0.0, t_start - st.t_submit_pc)
@@ -218,37 +263,9 @@ class CountingService:
         key = st.request.group_key(g.fingerprint)
         grp = self._groups.get(key)
         if grp is None:
-            spec = st.request.spec
-            t = spec.tree
-            t_build = time.perf_counter()
-            eng = self.engine_cache.get(
-                g, spec, st.request.engine,
-                st.request.plan, **self.engine_kw)
             # compile time is attributed to the group creator; joiners
             # inherit a warm engine and report build_s = 0
-            st.build_s = time.perf_counter() - t_build
-            scale = 1.0 / (t.automorphisms * colorful_probability(t.k))
-            # canonical hash, not name: two spellings of one tree resume
-            # the same ledger
-            ledger_dir = os.path.join(
-                self.ledger_root,
-                f"{g.fingerprint[:12]}_{spec.canonical_hash}_"
-                f"{st.request.engine}_{st.request.plan}_s{st.request.seed}")
-            runner = EstimatorRunner(
-                engine_counter(eng, seed=st.request.seed,
-                               batch_size=self.batch_size),
-                k=t.k, automorphisms=t.automorphisms, n_iterations=None,
-                ledger_dir=ledger_dir,
-                checkpoint_every=self.checkpoint_every,
-                seed=st.request.seed)
-            # resume: ledgered contiguous prefix becomes instant history
-            led = runner.completed_iterations()
-            history: list[float] = []
-            while len(history) in led:
-                history.append(led[len(history)] * scale)
-            grp = _Group(key=key, graph_name=st.request.graph, runner=runner,
-                         engine=eng, scale=scale, history=history,
-                         cursor=len(history), members=[])
+            grp, st.build_s = self._build_group(st)
             self._groups[key] = grp
         else:
             st.shared_group = True
@@ -314,6 +331,50 @@ class CountingService:
         return [self._requests[rid] for rid in grp.members
                 if self._requests[rid].status is RequestStatus.RUNNING]
 
+    def _plan_dispatch(self, grp: _Group) -> list[int] | None:
+        """Fresh iteration ids for one round of ``grp``, or None when the
+        group is drained (every member retired, failed, or cancelled).
+        Liveness is evaluated here, immediately before the dispatch it
+        plans — so cancelling a group's last live member drains it before
+        the next round, never one round late."""
+        live = self._live_members(grp)
+        if not live:
+            return None
+        # never dispatch past the last live member's remaining budget
+        # (every request has a cap — adaptive ones the service default)
+        need = max(m.cap - m.stat.n for m in live)
+        n_new = min(self.round_size, max(need, 1))
+        return list(range(grp.cursor, grp.cursor + n_new))
+
+    def _dispatch_ids(self, grp: _Group, ids: list[int]) -> bool:
+        """Run one planned round and append its scaled samples to the group
+        history; returns False when the dispatch raised (live members are
+        marked FAILED). The runner checkpoints the ledger per batch, so
+        samples computed for a request cancelled mid-dispatch are still
+        flushed and serve future joiners."""
+        t_disp = time.perf_counter()
+        try:
+            with _tracing.span("service.dispatch",
+                               group=grp.graph_name,
+                               engine=grp.key[2], n=len(ids),
+                               tenants=len(self._live_members(grp))):
+                with _tracing.profiled_dispatch():
+                    per = grp.runner.run_iterations(ids)
+        except Exception as exc:
+            for m in self._live_members(grp):
+                m.status = RequestStatus.FAILED
+                m.error = f"{type(exc).__name__}: {exc}"
+                _metrics.counter("service_requests_total",
+                                 status="failed").inc()
+            return False
+        _metrics.counter("service_dispatches_total").inc()
+        _metrics.histogram("service_dispatch_seconds").observe(
+            time.perf_counter() - t_disp)
+        for i in ids:
+            grp.history.append(per[i] * grp.scale)
+        grp.cursor += len(ids)
+        return True
+
     def step(self) -> int:
         """One scheduling round; returns the number of live requests left.
 
@@ -336,36 +397,10 @@ class CountingService:
                                          status="failed").inc()
             self._consume_and_retire()
             for grp in self._groups.values():
-                live = self._live_members(grp)
-                if not live:
+                ids = self._plan_dispatch(grp)
+                if ids is None:
                     continue
-                # never dispatch past the last live member's remaining
-                # budget (every request has a cap — adaptive ones the
-                # service default)
-                need = max(m.cap - m.stat.n for m in live)
-                n_new = min(self.round_size, max(need, 1))
-                ids = list(range(grp.cursor, grp.cursor + n_new))
-                t_disp = time.perf_counter()
-                try:
-                    with _tracing.span("service.dispatch",
-                                       group=grp.graph_name,
-                                       engine=grp.key[2], n=n_new,
-                                       tenants=len(live)):
-                        with _tracing.profiled_dispatch():
-                            per = grp.runner.run_iterations(ids)
-                except Exception as exc:
-                    for m in live:
-                        m.status = RequestStatus.FAILED
-                        m.error = f"{type(exc).__name__}: {exc}"
-                        _metrics.counter("service_requests_total",
-                                         status="failed").inc()
-                    continue
-                _metrics.counter("service_dispatches_total").inc()
-                _metrics.histogram("service_dispatch_seconds").observe(
-                    time.perf_counter() - t_disp)
-                for i in ids:
-                    grp.history.append(per[i] * grp.scale)
-                grp.cursor += n_new
+                self._dispatch_ids(grp, ids)
             self._consume_and_retire()
             self._release_idle_engines()
         return sum(st.status in (RequestStatus.PENDING, RequestStatus.RUNNING)

@@ -290,6 +290,45 @@ class TestLifecycleAndResume:
         with pytest.raises(KeyError):
             svc.submit(CountRequest("nograph", "u3", max_iters=4))
 
+    def test_cancel_mid_dispatch_flushes_ledger_and_drains_group(
+            self, tmp_path):
+        """A cancel landing while a dispatch is in flight must not lose
+        the dispatched samples (the ledger checkpoint still flushes; they
+        serve future joiners) and must drain the group before the next
+        round — not one round late."""
+        g = _graph(seed=9)
+        cache = EngineCache()
+        eng = cache.get(g, "u3")
+        inner = eng.count_iterations_batch
+        dispatched: list[int] = []
+        svc = CountingService(ledger_root=str(tmp_path / "led"),
+                              engine_cache=cache, round_size=4)
+
+        def spy(iterations, **kw):
+            dispatched.extend(int(i) for i in iterations)
+            svc.cancel(rid)          # lands while this dispatch is running
+            return inner(iterations, **kw)
+
+        eng.count_iterations_batch = spy
+        svc.add_graph("g", g)
+        rid = svc.submit(CountRequest("g", "u3", max_iters=12))
+        svc.step()                   # dispatches one round; cancel mid-call
+        assert svc.status(rid) is RequestStatus.CANCELLED
+        assert dispatched == [0, 1, 2, 3]
+        (grp,) = svc._groups.values()
+        # in-flight samples were flushed to the ledger and group history
+        assert sorted(grp.runner.completed_iterations()) == [0, 1, 2, 3]
+        assert len(grp.history) == 4
+        # the drained group never costs another device dispatch
+        svc.step()
+        svc.run()
+        assert dispatched == [0, 1, 2, 3]
+        # and a future joiner consumes the flushed samples for free
+        r2 = svc.submit(CountRequest("g", "u3", max_iters=4))
+        svc.run()
+        assert svc.result(r2).iterations == 4
+        assert dispatched == [0, 1, 2, 3]
+
     def test_resume_after_kill_reuses_ledger(self, tmp_path):
         g = _graph(seed=8)
         cache = EngineCache()

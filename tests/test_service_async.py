@@ -1,0 +1,349 @@
+"""Async serving front end: QoS policy, backpressure/shedding, bitwise
+equivalence with the synchronous round scheduler, and the HTTP surface.
+
+The core invariant under test: every sample is a deterministic function
+of (seed, iteration id), so the continuously-admitting dispatcher —
+whatever order QoS makes it dispatch groups in — must reproduce the
+round scheduler's estimates bit-for-bit.
+"""
+
+import json
+import threading
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.graph import erdos_renyi
+from repro.service import (AdmissionQueue, AsyncCountingService,
+                           CountingService, CountRequest, EngineCache,
+                           EstimateCache, FairScheduler, QoS, QoSClass,
+                           RequestStatus)
+from repro.service.qos import (SHED_CLOSED, SHED_MEMORY, SHED_QUEUE_FULL,
+                               GroupView)
+
+INF = float("inf")
+
+
+def _graph(n=30, deg=4.0, seed=0):
+    return erdos_renyi(n, deg, seed=seed)
+
+
+def _asvc(tmp_path, name="async", **kw):
+    kw.setdefault("round_size", 4)
+    kw.setdefault("default_max_iters", 64)
+    kw.setdefault("idle_wait_s", 0.01)
+    return AsyncCountingService(ledger_root=str(tmp_path / name), **kw)
+
+
+def _gv(key, rank, deadline=INF, tenants=(("t", 1.0),)):
+    return GroupView(key=key, rank=rank, deadline=deadline, tenants=tenants)
+
+
+class TestQoS:
+    def test_coercion_and_defaults(self):
+        q = QoS(klass="deadline")
+        assert q.klass is QoSClass.DEADLINE
+        assert q.deadline_s == 30.0          # deadline class gets a budget
+        assert QoS().klass is QoSClass.INTERACTIVE
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            QoS(weight=0.0)
+        with pytest.raises(ValueError):
+            QoS(deadline_s=-1.0)
+        with pytest.raises(ValueError):
+            QoS(klass="platinum")
+
+
+class TestFairScheduler:
+    def test_strict_class_priority(self):
+        pol = FairScheduler()
+        b = _gv("b", QoSClass.BATCH.rank)
+        i = _gv("i", QoSClass.INTERACTIVE.rank)
+        d = _gv("d", QoSClass.DEADLINE.rank, deadline=99.0)
+        assert pol.pick([b, i, d]) is d
+        assert pol.pick([b, i]) is i
+
+    def test_edf_within_deadline_class(self):
+        pol = FairScheduler()
+        early = _gv("early", 0, deadline=10.0, tenants=(("a", 1.0),))
+        late = _gv("late", 0, deadline=20.0, tenants=(("b", 1.0),))
+        assert pol.pick([late, early]) is early
+
+    def test_fifo_on_exact_ties(self):
+        pol = FairScheduler()
+        a = _gv("a", 2, tenants=(("t1", 1.0),))
+        b = _gv("b", 2, tenants=(("t2", 1.0),))
+        assert pol.pick([a, b]) is a
+        assert pol.pick([b, a]) is b
+
+    def test_weighted_fair_share_is_proportional(self):
+        # under sustained contention a weight-2 tenant gets exactly twice
+        # the dispatches of a weight-1 tenant
+        pol = FairScheduler()
+        heavy = _gv("heavy", 2, tenants=(("heavy", 2.0),))
+        light = _gv("light", 2, tenants=(("light", 1.0),))
+        wins = {"heavy": 0, "light": 0}
+        for _ in range(30):
+            gv = pol.pick([heavy, light])
+            wins[gv.key] += 1
+            pol.charge(gv.tenants, 8)
+        assert wins["heavy"] == 2 * wins["light"]
+
+    def test_newcomer_starts_at_floor_no_banked_credit(self):
+        pol = FairScheduler()
+        pol.charge([("old", 1.0)], 100)
+        old = _gv("old", 1, tenants=(("old", 1.0),))
+        new = _gv("new", 1, tenants=(("new", 1.0),))
+        # an idle newcomer starts at the current floor, not at zero: one
+        # dispatch charged to it puts it *behind* the incumbent instead of
+        # letting it monopolize with 100 units of banked credit
+        pol.charge([("new", 1.0)], 8)
+        assert pol.pick([new, old]) is old
+        assert pol.virtual_times()["new"] > 100.0
+
+
+class TestAdmissionQueue:
+    def test_bounded_offer_and_drain(self):
+        q = AdmissionQueue(2)
+        assert q.offer("a") is None
+        assert q.offer("b") is None
+        assert q.offer("c") == SHED_QUEUE_FULL
+        assert len(q) == 2
+        assert q.drain() == ["a", "b"]
+        assert len(q) == 0
+        assert q.offer("c") is None      # capacity freed by the drain
+
+    def test_maxsize_validated(self):
+        with pytest.raises(ValueError):
+            AdmissionQueue(0)
+
+
+class TestBackpressure:
+    def test_queue_full_sheds_with_reason(self, tmp_path):
+        # dispatcher deliberately not started: the queue cannot drain
+        svc = _asvc(tmp_path, max_queue_depth=1)
+        svc.add_graph("g", _graph())
+        r1 = svc.submit(CountRequest("g", "u3", max_iters=4))
+        r2 = svc.submit(CountRequest("g", "u3", max_iters=4, seed=1))
+        assert svc.status(r1) is RequestStatus.PENDING
+        assert svc.status(r2) is RequestStatus.SHED
+        assert svc.shed_reason(r2) == SHED_QUEUE_FULL
+        assert svc.shed_reason(r1) is None
+        with pytest.raises(RuntimeError):
+            svc.result(r2)
+        # SHED is terminal: waiters do not hang on it
+        assert svc.wait([r2], timeout=5.0)
+        assert svc.stats()["shed"] == 1
+
+    def test_memory_budget_sheds_at_admission(self, tmp_path):
+        svc = _asvc(tmp_path, memory_budget_bytes=1)
+        svc.add_graph("g", _graph())
+        rid = svc.submit(CountRequest("g", "u5", max_iters=4))
+        assert svc.status(rid) is RequestStatus.SHED
+        assert svc.shed_reason(rid) == SHED_MEMORY
+        # admission control used the analytic model only: no build wasted
+        assert svc.engine_cache.stats()["builds"] == 0
+
+    def test_closed_service_sheds(self, tmp_path):
+        svc = _asvc(tmp_path)
+        svc.add_graph("g", _graph())
+        svc.start()
+        svc.close()
+        rid = svc.submit(CountRequest("g", "u3", max_iters=4))
+        assert svc.status(rid) is RequestStatus.SHED
+        assert svc.shed_reason(rid) == SHED_CLOSED
+
+    def test_saturated_queue_never_deadlocks(self, tmp_path):
+        # many submitters against a 2-deep queue with the dispatcher live:
+        # every request must reach a terminal status and close() must
+        # return — shed requests shed, admitted ones finish
+        g = _graph(seed=13)
+        svc = _asvc(tmp_path, max_queue_depth=2)
+        svc.add_graph("g", g)
+        with svc:
+            rids = [svc.submit(CountRequest("g", "u3", max_iters=4,
+                                            seed=i % 2),
+                               qos=QoS(tenant=f"t{i % 3}"))
+                    for i in range(12)]
+            assert svc.wait(rids, timeout=180.0)
+        statuses = {svc.status(r) for r in rids}
+        assert statuses <= {RequestStatus.DONE, RequestStatus.SHED}
+        assert any(svc.status(r) is RequestStatus.DONE for r in rids)
+        assert svc._thread is None       # dispatcher exited cleanly
+
+
+class TestAsyncScheduling:
+    def test_async_matches_sync_bitwise(self, tmp_path):
+        g = _graph(36, 4.0, seed=11)
+        cache = EngineCache()
+        reqs = [dict(template="u3", rel_stderr=0.2, seed=3),
+                dict(template="path4", max_iters=12, seed=4),
+                dict(template="u3", rel_stderr=0.2, seed=3)]  # shares group
+
+        sync = CountingService(ledger_root=str(tmp_path / "sync"),
+                               round_size=4, engine_cache=cache)
+        sync.add_graph("g", g)
+        srids = [sync.submit(CountRequest("g", **r)) for r in reqs]
+        sync.run()
+
+        asvc = _asvc(tmp_path, engine_cache=cache)
+        asvc.add_graph("g", g)
+        with asvc:
+            arids = [asvc.submit(CountRequest("g", **r),
+                                 qos=QoS(tenant=f"t{i}"))
+                     for i, r in enumerate(reqs)]
+            assert asvc.drain(timeout=180.0)
+        for sr, ar in zip(srids, arids):
+            s, a = sync.result(sr), asvc.result(ar)
+            assert a.estimate == s.estimate
+            assert a.stderr == s.stderr
+            assert a.iterations == s.iterations
+        assert asvc.stats()["groups"] == 2
+
+    def test_deadline_retires_before_batch_under_contention(self, tmp_path):
+        # submit everything while the dispatcher is down, then start it:
+        # all three groups contend from the first dispatch boundary, and
+        # the deadline group must win every round until it retires
+        g = _graph(seed=12)
+        svc = _asvc(tmp_path)
+        svc.add_graph("g", g)
+        batch = [svc.submit(CountRequest("g", "u3", max_iters=24, seed=s),
+                            qos=QoS(klass="batch", tenant="etl"))
+                 for s in (0, 1)]
+        dl = svc.submit(CountRequest("g", "path4", max_iters=8, seed=2),
+                        qos=QoS(klass="deadline", deadline_s=60.0,
+                                tenant="sla"))
+        with svc:
+            assert svc.drain(timeout=180.0)
+        order = svc.retired_order()
+        assert order.index(dl) < min(order.index(r) for r in batch)
+        assert svc.result(dl).iterations == 8
+
+    def test_cancel_while_queued_is_honored(self, tmp_path):
+        svc = _asvc(tmp_path)
+        svc.add_graph("g", _graph())
+        rid = svc.submit(CountRequest("g", "u3", max_iters=4))
+        svc.cancel(rid)
+        assert svc.status(rid) is RequestStatus.CANCELLED
+        with svc:
+            assert svc.drain(timeout=60.0)
+        # the dispatcher drained the queue without resurrecting it
+        assert svc.status(rid) is RequestStatus.CANCELLED
+        assert svc.stats()["groups"] == 0
+
+    def test_sync_run_guarded_while_dispatcher_alive(self, tmp_path):
+        svc = _asvc(tmp_path)
+        with svc:
+            with pytest.raises(RuntimeError, match="async dispatcher"):
+                svc.run()
+
+
+def _ent(iters):
+    return {"estimate": float(iters), "stderr": 0.1,
+            "rel_stderr": 0.1, "iterations": iters}
+
+
+class TestEstimateCacheConcurrency:
+    def test_concurrent_writers_single_instance(self, tmp_path):
+        path = str(tmp_path / "est.json")
+        cache = EstimateCache(path)
+
+        def put_range(base):
+            for i in range(20):
+                cache.put(f"k{base + i}", _ent(base + i + 1))
+
+        threads = [threading.Thread(target=put_range, args=(j * 20,))
+                   for j in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        with open(path) as f:
+            json.load(f)                 # the file is always valid JSON
+        assert len(EstimateCache(path)) == 80
+
+    def test_two_instances_same_path_union_survives(self, tmp_path):
+        # two service processes sharing one cache file: read-modify-write
+        # under the file lock merges, so neither clobbers the other
+        path = str(tmp_path / "est.json")
+        a, b = EstimateCache(path), EstimateCache(path)
+        a.put("ka", _ent(4))
+        b.put("kb", _ent(4))             # b never saw ka in memory
+        a.put("shared", _ent(4))
+        b.put("shared", _ent(8))         # more iterations wins the merge
+        a.put("shared", _ent(2))         # stale lower-precision write loses
+        fresh = EstimateCache(path)
+        assert fresh.get("ka") is not None
+        assert fresh.get("kb") is not None
+        assert fresh.get("shared")["iterations"] == 8
+        assert len(fresh) == 3
+
+
+class TestHTTPFrontend:
+    def test_count_result_and_health_end_to_end(self, tmp_path):
+        from repro.service.frontend import make_server
+        g = _graph(seed=14)
+        svc = _asvc(tmp_path, name="http")
+        svc.add_graph("g", g)
+        svc.start()
+        httpd = make_server(svc, "127.0.0.1", 0)   # ephemeral port
+        port = httpd.server_address[1]
+        threading.Thread(target=httpd.serve_forever, daemon=True).start()
+        base = f"http://127.0.0.1:{port}"
+        try:
+            body = json.dumps({
+                "graph": "g", "templates": ["u3"], "max_iters": 4,
+                "qos": {"class": "interactive", "tenant": "alice"},
+                "wait": True, "timeout_s": 120}).encode()
+            req = urllib.request.Request(
+                base + "/count", data=body,
+                headers={"Content-Type": "application/json"})
+            with urllib.request.urlopen(req, timeout=120) as resp:
+                assert resp.status == 200
+                payload = json.load(resp)
+            (ent,) = payload["requests"]
+            assert ent["status"] == "done"
+            assert ent["result"]["iterations"] == 4
+
+            with urllib.request.urlopen(f"{base}/result/{ent['id']}",
+                                        timeout=30) as resp:
+                again = json.load(resp)
+            assert again["result"]["estimate"] == ent["result"]["estimate"]
+
+            with urllib.request.urlopen(base + "/healthz",
+                                        timeout=30) as resp:
+                assert json.load(resp)["ok"]
+            with urllib.request.urlopen(base + "/metrics.json",
+                                        timeout=30) as resp:
+                snap = json.load(resp)
+            assert any("qos=" in k for k in snap["histograms"])
+        finally:
+            httpd.shutdown()
+            svc.close()
+
+    def test_bad_template_is_a_400_unknown_route_404(self, tmp_path):
+        from repro.service.frontend import make_server
+        svc = _asvc(tmp_path, name="http2")
+        svc.add_graph("g", _graph())
+        svc.start()
+        httpd = make_server(svc, "127.0.0.1", 0)
+        port = httpd.server_address[1]
+        threading.Thread(target=httpd.serve_forever, daemon=True).start()
+        base = f"http://127.0.0.1:{port}"
+        try:
+            req = urllib.request.Request(
+                base + "/count",
+                data=json.dumps({"templates": ["no-such-template"],
+                                 "max_iters": 4}).encode(),
+                headers={"Content-Type": "application/json"})
+            with pytest.raises(urllib.error.HTTPError) as ei:
+                urllib.request.urlopen(req, timeout=30)
+            assert ei.value.code == 400
+            with pytest.raises(urllib.error.HTTPError) as ei:
+                urllib.request.urlopen(base + "/nope", timeout=30)
+            assert ei.value.code == 404
+        finally:
+            httpd.shutdown()
+            svc.close()
