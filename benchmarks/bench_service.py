@@ -41,9 +41,12 @@ shows up in review).
 ``--http URL`` switches to a closed-loop driver for a live ``serve
 --http`` server: a worker pool POSTs mixed-class ``/count`` bodies
 (every 5th ``wait:false`` to exercise fire-and-forget + ``/result``
-polling), tallies done/shed/accepted, and writes the server's
-``/metrics.json`` snapshot to ``--metrics-out`` (the CI serving smoke
-validates it with ``repro.obs.validate``).
+polling), polls every accepted request to a *terminal* status, tallies
+done/shed/failed, and writes the server's ``/metrics.json`` snapshot to
+``--metrics-out`` (the CI serving smoke validates it with
+``repro.obs.validate``). ``--min-success FRAC`` makes the driver exit
+nonzero unless that fraction of requests terminates ``done`` — the CI
+chaos smoke's containment bar against a ``serve --inject`` server.
 """
 
 from __future__ import annotations
@@ -342,14 +345,16 @@ def _http_body(rng: random.Random, i: int) -> dict:
 
 
 def _http_drive(url: str, n: int, seed: int, workers: int,
-                metrics_out: str | None) -> int:
+                metrics_out: str | None,
+                min_success: float | None = None) -> int:
     import urllib.error
     import urllib.request
 
     url = url.rstrip("/")
     rng = random.Random(seed)
     bodies = [_http_body(rng, i) for i in range(n)]
-    tally = {"done": 0, "shed": 0, "accepted": 0, "failed": 0, "error": 0}
+    tally = {"done": 0, "shed": 0, "accepted": 0, "failed": 0,
+             "cancelled": 0, "error": 0}
     poll_rids: list[str] = []
     lock = threading.Lock()
     cursor = [0]
@@ -361,17 +366,20 @@ def _http_drive(url: str, n: int, seed: int, workers: int,
         try:
             with urllib.request.urlopen(req, timeout=180) as resp:
                 payload = json.load(resp)
-        except urllib.error.HTTPError as e:     # 429 all-shed is expected
-            payload = json.load(e)
+        except urllib.error.HTTPError as e:     # 429 all-shed is expected;
+            payload = json.load(e)              # 500 carries error_class
         except Exception as exc:
             with lock:
                 tally["error"] += 1
             print(f"# http error: {exc}", flush=True)
             return
         with lock:
-            for ent in payload.get("requests", []):
+            if "requests" not in payload:       # structured handler error
+                tally["failed"] += len(body["templates"])
+                return
+            for ent in payload["requests"]:
                 st = ent.get("status")
-                if st in ("done", "shed", "failed"):
+                if st in ("done", "shed", "failed", "cancelled"):
                     tally[st] += 1
                 else:
                     tally["accepted"] += 1
@@ -395,13 +403,29 @@ def _http_drive(url: str, n: int, seed: int, workers: int,
         t.join()
     wall = time.perf_counter() - t0
 
-    for rid in poll_rids[:10]:         # fire-and-forget followup path
-        try:
-            with urllib.request.urlopen(f"{url}/result/{rid}",
-                                        timeout=30) as resp:
-                json.load(resp)
-        except urllib.error.HTTPError:
-            pass                       # 429 (shed) is a valid terminal read
+    # fire-and-forget followups: poll every accepted request to a terminal
+    # status — the containment contract says none may stay in limbo
+    deadline = time.monotonic() + 120.0
+    for rid in poll_rids:
+        status = "accepted"
+        while time.monotonic() < deadline:
+            try:
+                with urllib.request.urlopen(f"{url}/result/{rid}",
+                                            timeout=30) as resp:
+                    status = json.load(resp).get("status", status)
+            except urllib.error.HTTPError as e:   # 429 shed / 500 failed
+                try:
+                    status = json.load(e).get("status", status)
+                except Exception:
+                    pass
+            except Exception:
+                break
+            if status in ("done", "shed", "failed", "cancelled"):
+                break
+            time.sleep(0.2)
+        with lock:
+            tally["accepted"] -= 1
+            tally[status if status in tally else "error"] += 1
 
     snap = None
     try:
@@ -416,9 +440,17 @@ def _http_drive(url: str, n: int, seed: int, workers: int,
             json.dump(snap, f, indent=1, sort_keys=True)
         print(f"# wrote {metrics_out}", flush=True)
 
+    success = tally["done"] / max(n, 1)
     print(f"# http drive: {n} requests in {wall:.2f}s "
-          f"({n / wall:.1f} req/s) -> {tally}", flush=True)
-    return 1 if tally["error"] else 0
+          f"({n / wall:.1f} req/s) -> {tally} "
+          f"(success rate {success:.1%})", flush=True)
+    if tally["error"]:
+        return 1
+    if min_success is not None and success < min_success:
+        print(f"# FAIL: success rate {success:.1%} < "
+              f"required {min_success:.1%}", flush=True)
+        return 1
+    return 0
 
 
 def main(argv=None) -> int:
@@ -438,12 +470,18 @@ def main(argv=None) -> int:
     ap.add_argument("--metrics-out", metavar="PATH",
                     help="--http mode: write the server's /metrics.json "
                          "snapshot here")
+    ap.add_argument("--min-success", type=float, default=None,
+                    metavar="FRAC",
+                    help="--http mode: exit nonzero unless at least this "
+                         "fraction of requests terminates 'done' (the CI "
+                         "chaos smoke's containment bar)")
     ap.add_argument("--skip-micro", action="store_true",
                     help="skip the micro rows; run only the load harness")
     args = ap.parse_args(argv)
     if args.http:
         return _http_drive(args.http, args.requests or 50, args.seed,
-                           args.workers, args.metrics_out)
+                           args.workers, args.metrics_out,
+                           min_success=args.min_success)
     header()
     run(seed=args.seed, n_requests=args.requests or LOAD_REQUESTS,
         skip_micro=args.skip_micro)

@@ -4,10 +4,13 @@ Color-coding iterations are independent, idempotent units of work (the
 coloring is derived from fold_in(seed, iteration)), which makes the
 fault-tolerance model simple and strong:
 
-* a **ledger** (JSON, atomically replaced) records which iterations are done
-  and the accumulated colorful sum;
+* a **ledger** (checksummed JSON, atomically replaced) records which
+  iterations are done and the accumulated colorful sum;
 * on restart, only missing iterations run — a preempted/failed run loses at
-  most ``checkpoint_every`` iterations of work;
+  most ``checkpoint_every`` iterations of work; a *torn* ledger (kill -9
+  mid-write, disk corruption) is detected by its CRC envelope, quarantined
+  to ``ledger.json.corrupt``, and the run restarts cold instead of raising
+  into the scheduler;
 * stragglers / lost pods: iterations are dispatched in batches; any worker
   can pick up remaining ones because nothing is owner-pinned;
 * elastic scaling: the ledger is mesh-shape independent, so a resumed run
@@ -21,7 +24,6 @@ ledger per iteration batch.
 from __future__ import annotations
 
 import dataclasses
-import json
 import os
 import time
 
@@ -30,6 +32,8 @@ import numpy as np
 from repro.core.colorsets import colorful_probability
 from repro.obs import metrics as _metrics
 from repro.obs import tracing as _tracing
+from repro.resilience import faults as _faults
+from repro.resilience import recovery as _recovery
 
 __all__ = ["EstimatorRunner", "RunnerResult"]
 
@@ -76,12 +80,14 @@ class EstimatorRunner:
 
     # ---------------------------------------------------------------- ledger
     def _load_ledger(self) -> dict:
-        if os.path.isfile(self.ledger_path):
-            with open(self.ledger_path) as f:
-                led = json.load(f)
-            if led.get("seed") == self.seed and \
-                    led.get("n_iterations") == self.n_iterations:
-                return led
+        led, status = _recovery.load_checked(self.ledger_path, kind="ledger")
+        if status not in ("ok", "missing"):
+            _metrics.counter("runner_ledger_corruptions_total",
+                             reason=status).inc()
+        if led is not None and isinstance(led.get("completed"), dict) \
+                and led.get("seed") == self.seed \
+                and led.get("n_iterations") == self.n_iterations:
+            return led
         return {"seed": self.seed, "n_iterations": self.n_iterations,
                 "completed": {}, "restarts": 0}
 
@@ -99,10 +105,8 @@ class EstimatorRunner:
 
     def _save_ledger(self, led: dict) -> None:
         os.makedirs(self.ledger_dir, exist_ok=True)
-        tmp = self.ledger_path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(led, f)
-        os.replace(tmp, self.ledger_path)
+        _recovery.write_checked(self.ledger_path, led,
+                                fault_point="ledger.write")
 
     def completed_iterations(self) -> dict[int, float]:
         """Ledgered {iteration id: colorful sum} — work already done."""
@@ -171,7 +175,8 @@ class EstimatorRunner:
         )
 
 
-def engine_counter(engine, seed: int = 0, batch_size: int | None = None):
+def engine_counter(engine, seed: int = 0, batch_size: int | None = None,
+                   label: str | None = None):
     """Adapt a CountingEngine to the runner's counter interface.
 
     A whole checkpoint batch is dispatched as ONE device call through the
@@ -179,9 +184,15 @@ def engine_counter(engine, seed: int = 0, batch_size: int | None = None):
     ``fold_in(seed, iteration)``); ``batch_size`` overrides the engine's
     chunking knob. Per-iteration values are independent of how iterations
     are grouped into batches, so resumed runs reproduce straight runs.
+
+    ``label`` names this dispatch stream at the ``kernel.dispatch`` fault
+    point (so chaos plans can target one group); defaults to the engine
+    kind.
     """
+    ctx = label if label is not None else getattr(engine, "engine", "engine")
 
     def counter(iterations):
+        _faults.inject("kernel.dispatch", context=ctx)
         return engine.count_iterations_batch(list(iterations), seed=seed,
                                              batch_size=batch_size)
 

@@ -18,6 +18,11 @@ Two modes share every engine/cache/obs flag:
   ``--queue-depth`` bounds admission (overflow requests are shed with
   HTTP 429). ``--metrics-out`` writes the final snapshot on shutdown.
 
+Failure containment knobs (both modes): ``--dispatch-timeout`` /
+``--dispatch-retries`` shape the per-dispatch watchdog + retry budget;
+``--inject`` arms the deterministic fault-injection harness (chaos
+testing — e.g. ``--inject kernel.dispatch:raise:0.2``).
+
 Each template in ``--templates`` becomes one service request (repeats are
 real repeated requests — they exercise the engine cache and dispatch-group
 sharing); names accept the registry plus dynamic ``path{k}`` / ``star{k}``
@@ -60,6 +65,13 @@ def _load_graph(spec: str, edge_list: str | None):
     raise ValueError(f"unknown graph spec {spec!r}")
 
 
+def _retry_policy(args):
+    from repro.resilience.retry import RetryPolicy
+    return RetryPolicy(
+        max_attempts=max(args.dispatch_retries, 1),
+        timeout_s=args.dispatch_timeout if args.dispatch_timeout else None)
+
+
 def _serve_http(args, g, budget, engine_kw) -> int:
     """Serving mode: async QoS service + HTTP front end until SIGINT."""
     import signal
@@ -76,7 +88,8 @@ def _serve_http(args, g, budget, engine_kw) -> int:
         estimate_cache=args.results_cache,
         engine_kw=engine_kw or None,
         max_queue_depth=args.queue_depth,
-        warm_pool=not args.no_warm_pool)
+        warm_pool=not args.no_warm_pool,
+        retry_policy=_retry_policy(args))
     svc.add_graph("g", g)
     # pre-warm the advertised templates: cold build+compile lands here,
     # on startup/idle time, never on the first interactive request
@@ -175,12 +188,33 @@ def main(argv=None):
     ap.add_argument("--no-warm-pool", action="store_true",
                     help="disable idle-time engine pre-materialization "
                          "in serving mode")
+    ap.add_argument("--inject", default=None, metavar="PLAN",
+                    help="arm the fault-injection harness: inline "
+                         "'point:mode[:rate[:times]],...' specs or a JSON "
+                         "plan file (chaos testing; see repro.resilience."
+                         "faults)")
+    ap.add_argument("--inject-seed", type=int, default=0,
+                    help="seed for the deterministic fault schedule")
+    ap.add_argument("--dispatch-timeout", type=float, default=120.0,
+                    metavar="S",
+                    help="wall-clock watchdog per device dispatch; a hung "
+                         "dispatch is abandoned and retried (0 = off)")
+    ap.add_argument("--dispatch-retries", type=int, default=4,
+                    metavar="N",
+                    help="retry budget per dispatch (jittered exponential "
+                         "backoff between attempts)")
     args = ap.parse_args(argv)
 
     if args.trace:
         obs_tracing.configure(enabled=True, sync=True)
     if args.profile_dir:
         obs_tracing.arm_profiler(args.profile_dir)
+    if args.inject:
+        from repro.resilience import faults as _faults
+        plan = _faults.FaultPlan.parse(args.inject, seed=args.inject_seed)
+        _faults.install_plan(plan)
+        print(f"fault injection armed: {len(plan.specs)} spec(s), "
+              f"seed {args.inject_seed}", flush=True)
 
     g = _load_graph(args.graph, args.edge_list)
     print(f"serving graph: n={g.n} edge-slots={g.m} "
@@ -204,7 +238,8 @@ def main(argv=None):
         memory_budget_bytes=budget,
         engine_cache=EngineCache(max_entries=args.engine_cache_size),
         estimate_cache=args.results_cache,
-        engine_kw=engine_kw or None)
+        engine_kw=engine_kw or None,
+        retry_policy=_retry_policy(args))
     svc.add_graph("g", g)
     templates: list = [t for t in args.templates.split(",") if t]
     for i, es in enumerate(args.template_edges):

@@ -1,0 +1,38 @@
+"""Failure containment for the counting service.
+
+Four cooperating pieces, each threaded through a different layer of the
+stack (see the README "Failure model & degradation ladder" section):
+
+* :mod:`repro.resilience.faults` — the seed-deterministic fault-injection
+  harness (named injection points, ``serve --inject``, the chaos suite's
+  fixture);
+* :mod:`repro.resilience.retry` — retry budgets, jittered exponential
+  backoff, and the dispatch watchdog (hung-dispatch detection);
+* :mod:`repro.resilience.degradation` — the per-engine degradation ladder
+  (fused → unfused → XLA, bf16 → f32) and per-group circuit breakers;
+* :mod:`repro.resilience.recovery` — checksummed, versioned JSON state
+  with quarantine-on-corruption loads (ledgers, caches).
+
+Design rule: containment code never special-cases injected faults — an
+:class:`~repro.resilience.faults.InjectedFault` is an ordinary exception,
+so surviving the chaos suite means surviving the real thing.
+"""
+
+from repro.resilience.degradation import (LADDER_LEVELS, BreakerBoard,
+                                          CircuitBreaker, CircuitOpen,
+                                          DegradationState)
+from repro.resilience.faults import (FaultPlan, FaultSpec, InjectedFault,
+                                     active_plan, clear_plan, current_plan,
+                                     install_plan)
+from repro.resilience.recovery import load_checked, quarantine, write_checked
+from repro.resilience.retry import DispatchTimeout, RetryPolicy, \
+    run_with_timeout
+
+__all__ = [
+    "FaultPlan", "FaultSpec", "InjectedFault",
+    "install_plan", "clear_plan", "current_plan", "active_plan",
+    "RetryPolicy", "DispatchTimeout", "run_with_timeout",
+    "DegradationState", "CircuitBreaker", "CircuitOpen", "BreakerBoard",
+    "LADDER_LEVELS",
+    "load_checked", "write_checked", "quarantine",
+]

@@ -56,16 +56,30 @@ import time
 
 from repro.core import executor as pexec
 from repro.obs import metrics as _metrics
+from repro.resilience import faults as _faults
+from repro.resilience.retry import RetryPolicy
 from repro.service.qos import (SHED_CLOSED, SHED_MEMORY, AdmissionQueue,
                                FairScheduler, GroupView, QoS, QoSClass)
 from repro.service.requests import CountRequest, RequestResult, RequestStatus
 from repro.service.scheduler import CountingService, _Group, _ReqState
 
-__all__ = ["AsyncCountingService", "TERMINAL_STATUSES"]
+__all__ = ["AsyncCountingService", "DispatcherDead", "TERMINAL_STATUSES"]
 
 TERMINAL_STATUSES = frozenset((
     RequestStatus.DONE, RequestStatus.FAILED,
     RequestStatus.CANCELLED, RequestStatus.SHED))
+
+
+class DispatcherDead(RuntimeError):
+    """The dispatcher thread crashed past its restart budget; live
+    requests are failed with this so nothing waits forever."""
+
+    def __init__(self, crashes: int, cause: BaseException):
+        self.crashes = crashes
+        self.cause = cause
+        super().__init__(
+            f"dispatcher dead after {crashes} crashes "
+            f"(last: {type(cause).__name__}: {cause})")
 
 
 class AsyncCountingService(CountingService):
@@ -85,11 +99,24 @@ class AsyncCountingService(CountingService):
         dispatcher time (and honor :meth:`prewarm` hints).
     idle_wait_s:
         Dispatcher sleep granularity when there is nothing to do.
+    max_dispatcher_restarts:
+        Failure containment for the dispatcher thread itself: an
+        unhandled exception escaping the loop restarts it (after
+        re-queueing any drained-but-unattached requests) up to this many
+        times; past the budget, every live request is failed with a
+        structured ``DispatcherDead`` error and the service stops
+        admitting — admitted requests always reach a terminal status,
+        never orphaned limbo.
     """
 
     def __init__(self, *, max_queue_depth: int = 1024,
                  shed_on_memory: bool = True, warm_pool: bool = True,
-                 idle_wait_s: float = 0.05, **kw):
+                 idle_wait_s: float = 0.05,
+                 max_dispatcher_restarts: int = 3, **kw):
+        # async dispatches default to a wall-clock watchdog: a hung device
+        # call must not freeze the only dispatcher thread forever
+        if kw.get("retry_policy") is None:
+            kw["retry_policy"] = RetryPolicy(timeout_s=120.0)
         super().__init__(**kw)
         self._lock = threading.RLock()
         self._cv = threading.Condition(self._lock)
@@ -107,17 +134,20 @@ class AsyncCountingService(CountingService):
         self._thread: threading.Thread | None = None
         self._running = False
         self._closed = False
+        self.max_dispatcher_restarts = int(max_dispatcher_restarts)
+        self._dispatcher_crashes = 0
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> "AsyncCountingService":
-        """Start the dispatcher thread (idempotent)."""
+        """Start the supervised dispatcher thread (idempotent)."""
         with self._cv:
             if self._thread is not None and self._thread.is_alive():
                 return self
             self._running = True
             self._closed = False
+            self._dispatcher_crashes = 0
             self._thread = threading.Thread(
-                target=self._loop, name="pgbsc-async-dispatcher",
+                target=self._supervise, name="pgbsc-async-dispatcher",
                 daemon=True)
             self._thread.start()
         return self
@@ -426,8 +456,57 @@ class AsyncCountingService(CountingService):
                                    tenants=tuple(tenants.items())))
         return views
 
+    def _supervise(self) -> None:
+        """Dispatcher thread body: run :meth:`_loop`, and when an
+        exception escapes it (a bug, a poisoned attach, an injected
+        ``dispatch.loop`` fault), contain it — restart the loop with
+        drained-but-unattached requests re-queued, up to
+        ``max_dispatcher_restarts``; past the budget fail every live
+        request with :class:`DispatcherDead` and stop admitting. Either
+        way, every admitted request reaches a terminal status."""
+        while True:
+            try:
+                self._loop()
+                return                              # clean shutdown
+            except BaseException as exc:
+                _metrics.counter("dispatcher_crashes_total").inc()
+                with self._cv:
+                    self._dispatcher_crashes += 1
+                    crashed_out = (self._dispatcher_crashes
+                                   > self.max_dispatcher_restarts)
+                    if crashed_out or not self._running:
+                        self._running = False
+                        self._closed = True        # future submits shed
+                        self._fail_live(exc)
+                        self._cv.notify_all()
+                        return
+                    self._requeue_unattached()
+                _metrics.counter("dispatcher_restarts_total").inc()
+
+    def _requeue_unattached(self) -> None:
+        """Re-offer PENDING requests the crashed loop drained but never
+        attached (called under the lock). A full queue sheds them —
+        terminal either way, never silently dropped."""
+        queued = set(self._queue.contents())
+        for rid, st in self._requests.items():
+            if st.status is RequestStatus.PENDING and \
+                    st.group_key is None and rid not in queued:
+                reason = self._queue.offer(rid)
+                if reason is not None:
+                    self._shed(rid, st, reason,
+                               self._qos.get(rid, _DEFAULT_QOS))
+
+    def _fail_live(self, cause: BaseException) -> None:
+        """Fail every PENDING/RUNNING request with a structured
+        DispatcherDead error (called under the lock)."""
+        exc = DispatcherDead(self._dispatcher_crashes, cause)
+        for st in self._requests.values():
+            if st.status in (RequestStatus.PENDING, RequestStatus.RUNNING):
+                self._fail_member(st, exc)
+
     def _loop(self) -> None:
         while True:
+            _faults.inject("dispatch.loop", context="async")
             with self._cv:
                 if not self._running:
                     for rid in self._queue.drain():
@@ -486,6 +565,17 @@ class AsyncCountingService(CountingService):
         s["shed"] = sum(st.status is RequestStatus.SHED
                         for st in self._requests.values())
         s["tenant_virtual_time"] = self._policy.virtual_times()
+        s["dispatcher_crashes"] = self._dispatcher_crashes
+        return s
+
+    def resilience_state(self) -> dict:
+        s = super().resilience_state()
+        t = self._thread
+        s["dispatcher"] = {
+            "alive": bool(t is not None and t.is_alive()),
+            "crashes": self._dispatcher_crashes,
+            "max_restarts": self.max_dispatcher_restarts,
+        }
         return s
 
 

@@ -41,6 +41,8 @@ from repro.core.templates import TemplateSpec, as_template
 from repro.graph.structure import Graph
 from repro.obs import metrics as _metrics
 from repro.obs import tracing as _tracing
+from repro.resilience import faults as _faults
+from repro.resilience import recovery as _recovery
 
 __all__ = ["EngineCache", "EstimateCache", "SCHEMA_VERSION"]
 
@@ -113,6 +115,8 @@ class EngineCache:
             return self._engines[k]
         self.misses += 1
         _metrics.counter("engine_cache_lookups_total", result="miss").inc()
+        _faults.inject("engine.build",
+                       context=f"{g.fingerprint[:12]}:{engine}:{plan}")
         with _tracing.span("engine_cache.build", engine=engine, plan=plan):
             eng = build_engine(g, _template_build_arg(template), engine,
                                plan=plan, **build_kw)
@@ -156,10 +160,13 @@ class EstimateCache:
 
     Entries: ``{estimate, stderr, rel_stderr, iterations}``. ``path=None``
     keeps the cache in-memory (tests / ephemeral services). The on-disk
-    form is ``{"schema": SCHEMA_VERSION, "entries": {...}}``; files with a
-    different (or missing — pre-versioning) schema are silently treated as
-    empty, because their keys used template *names* and must not alias
-    today's canonical-hash keys.
+    form is ``{"schema": SCHEMA_VERSION, "crc": ..., "entries": {...}}``;
+    files with a different (or missing — pre-versioning) schema are
+    silently treated as empty, because their keys used template *names*
+    and must not alias today's canonical-hash keys. Unparseable or
+    CRC-failing files (torn writes, disk corruption) are quarantined to a
+    ``.corrupt`` sidecar and the cache starts cold — see
+    :mod:`repro.resilience.recovery`.
 
     **Concurrency.** The cache is safe for concurrent writers — both the
     async front end's threads inside one process and independent service
@@ -206,17 +213,37 @@ class EstimateCache:
 
     def _read_disk(self) -> dict[str, dict]:
         """Entries currently on disk (empty on stale schema / unreadable /
-        missing file — discarded, never crashed on)."""
+        missing / torn file — discarded, never crashed on).
+
+        A file that fails to parse or fails its CRC — a ``kill -9``
+        mid-write predating the tmp+replace protocol, disk corruption, an
+        injected ``cache.read`` fault — is quarantined to a ``.corrupt``
+        sidecar and the cache continues cold: corruption must never raise
+        into the admission path."""
         if not self.path or not os.path.isfile(self.path):
             return {}
         try:
+            _faults.inject("cache.read", context=self.path)
             with open(self.path) as f:
                 data = json.load(f)
-        except (OSError, json.JSONDecodeError):
-            data = None
+        except Exception:
+            _recovery.quarantine(self.path, kind="estimate_cache",
+                                 reason="read")
+            self.invalidations += 1
+            _metrics.counter("estimate_cache_invalidations_total",
+                             reason="corrupt").inc()
+            return {}
         if (isinstance(data, dict)
                 and data.get("schema") == SCHEMA_VERSION
                 and isinstance(data.get("entries"), dict)):
+            if "crc" in data and \
+                    _recovery.payload_crc(data["entries"]) != data["crc"]:
+                _recovery.quarantine(self.path, kind="estimate_cache",
+                                     reason="crc")
+                self.invalidations += 1
+                _metrics.counter("estimate_cache_invalidations_total",
+                                 reason="corrupt").inc()
+                return {}
             return data["entries"]
         self.invalidations += 1
         _metrics.counter("estimate_cache_invalidations_total",
@@ -292,6 +319,7 @@ class EstimateCache:
                 try:
                     with os.fdopen(fd, "w") as f:
                         json.dump({"schema": SCHEMA_VERSION,
+                                   "crc": _recovery.payload_crc(self._mem),
                                    "entries": self._mem}, f)
                     os.replace(tmp, self.path)
                 except BaseException:

@@ -36,17 +36,30 @@ Endpoints
 
 ``GET /metrics`` / ``GET /metrics.json`` / ``GET /healthz``
     Prometheus text exposition, the schema-v1 JSON metrics snapshot, and
-    a liveness probe carrying queue depth and in-flight count.
+    a liveness probe carrying queue depth, in-flight count, and the
+    failure-containment state (degradation ladders, circuit breakers,
+    dispatcher supervision) — a load balancer can see a degraded-but-
+    alive process and route around a dead dispatcher.
+
+Hardening
+---------
+Every handler error — including injected ``http.handler`` faults — is
+contained to a structured 500 body ``{"error", "error_class",
+"request_id"}``; the server thread pool survives. ``POST /count`` wait
+times are clamped to the server's ``max_wait_s`` so no handler thread
+can be parked forever by a client-supplied timeout.
 """
 
 from __future__ import annotations
 
+import itertools
 import json
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
 from repro.api import CountQuery
 from repro.obs import metrics as _metrics
+from repro.resilience import faults as _faults
 from repro.service.async_loop import AsyncCountingService
 from repro.service.qos import QoS
 from repro.service.requests import CountRequest, RequestStatus
@@ -55,6 +68,9 @@ __all__ = ["make_server", "serve_forever"]
 
 _MAX_BODY = 4 << 20          # 4 MiB request-body cap (edge-list templates)
 _DEFAULT_TIMEOUT_S = 120.0
+_MAX_WAIT_S = 300.0          # hard clamp on client-requested handler waits
+
+_REQ_IDS = itertools.count(1)
 
 
 def _parse_template(obj):
@@ -112,14 +128,26 @@ class _Handler(BaseHTTPRequestHandler):
     def svc(self) -> AsyncCountingService:
         return self.server.svc
 
+    def _send_error_500(self, exc: BaseException, req_id: str) -> None:
+        """Structured 500: error class + per-request id, so a client (or
+        the chaos driver) can attribute failures without scraping logs."""
+        _metrics.counter("http_errors_total",
+                         error_class=type(exc).__name__).inc()
+        try:
+            self._send_json(500, {
+                "error": f"{type(exc).__name__}: {exc}",
+                "error_class": type(exc).__name__,
+                "request_id": req_id})
+        except Exception:
+            pass           # client hung up mid-error; nothing left to save
+
     # ------------------------------------------------------------ endpoints
     def do_GET(self):
+        req_id = f"h{next(_REQ_IDS):06d}"
         try:
+            _faults.inject("http.handler", context=f"GET {self.path}")
             if self.path == "/healthz":
-                st = self.svc.stats()
-                self._send_json(200, {
-                    "ok": True, "queue_depth": st["queue_depth"],
-                    "requests": st["requests"], "groups": st["groups"]})
+                self._get_healthz()
             elif self.path == "/metrics":
                 self._send_text(200, _metrics.to_prometheus(),
                                 "text/plain; version=0.0.4; charset=utf-8")
@@ -130,7 +158,19 @@ class _Handler(BaseHTTPRequestHandler):
             else:
                 self._send_json(404, {"error": f"no route {self.path!r}"})
         except Exception as exc:
-            self._send_json(500, {"error": f"{type(exc).__name__}: {exc}"})
+            self._send_error_500(exc, req_id)
+
+    def _get_healthz(self) -> None:
+        st = self.svc.stats()
+        res = self.svc.resilience_state()
+        dispatcher = res.get("dispatcher", {})
+        # alive=False once the supervisor gave up: flip ok so a load
+        # balancer stops routing here, but keep serving results/metrics
+        ok = dispatcher.get("alive", True)
+        self._send_json(200 if ok else 503, {
+            "ok": bool(ok), "queue_depth": st["queue_depth"],
+            "requests": st["requests"], "groups": st["groups"],
+            "resilience": res})
 
     def _get_result(self, rid: str) -> None:
         try:
@@ -146,16 +186,20 @@ class _Handler(BaseHTTPRequestHandler):
             out["reason"] = self.svc.shed_reason(rid)
             self._send_json(429, out, {"Retry-After": "1"})
         elif status is RequestStatus.FAILED:
-            out["error"] = self.svc._requests[rid].error
+            st = self.svc._requests[rid]
+            out["error"] = st.error
+            out["error_class"] = st.error_class
             self._send_json(500, out)
         else:
             self._send_json(202, out)
 
     def do_POST(self):
+        req_id = f"h{next(_REQ_IDS):06d}"
         if self.path != "/count":
             self._send_json(404, {"error": f"no route {self.path!r}"})
             return
         try:
+            _faults.inject("http.handler", context=f"POST {self.path}")
             n = int(self.headers.get("Content-Length", 0))
             if n > _MAX_BODY:
                 self._send_json(413, {"error": "body too large"})
@@ -163,9 +207,11 @@ class _Handler(BaseHTTPRequestHandler):
             body = json.loads(self.rfile.read(n) or b"{}")
             self._post_count(body)
         except (ValueError, KeyError, TypeError) as exc:
-            self._send_json(400, {"error": f"{type(exc).__name__}: {exc}"})
+            self._send_json(400, {"error": f"{type(exc).__name__}: {exc}",
+                                  "error_class": type(exc).__name__,
+                                  "request_id": req_id})
         except Exception as exc:
-            self._send_json(500, {"error": f"{type(exc).__name__}: {exc}"})
+            self._send_error_500(exc, req_id)
 
     def _post_count(self, body: dict) -> None:
         graph = body.get("graph", "g")
@@ -193,8 +239,11 @@ class _Handler(BaseHTTPRequestHandler):
             max_iters=query.max_iters, min_iters=query.min_iters,
             seed=query.seed), qos=qos) for spec in query.templates]
         if body.get("wait", True):
-            self.svc.wait(rids, float(body.get("timeout_s",
-                                               _DEFAULT_TIMEOUT_S)))
+            # clamp: a client cannot park a handler thread past the
+            # server's budget — unfinished work polls via /result/<rid>
+            wait_s = min(float(body.get("timeout_s", _DEFAULT_TIMEOUT_S)),
+                         getattr(self.server, "max_wait_s", _MAX_WAIT_S))
+            self.svc.wait(rids, wait_s)
         out, n_done, n_shed = [], 0, 0
         for rid in rids:
             status = self.svc.status(rid)
@@ -207,6 +256,7 @@ class _Handler(BaseHTTPRequestHandler):
                 n_shed += 1
             elif status is RequestStatus.FAILED:
                 ent["error"] = self.svc._requests[rid].error
+                ent["error_class"] = self.svc._requests[rid].error_class
             out.append(ent)
         if n_shed == len(rids):
             self._send_json(429, {"requests": out}, {"Retry-After": "1"})
@@ -217,22 +267,26 @@ class _Handler(BaseHTTPRequestHandler):
 
 
 def make_server(svc: AsyncCountingService, host: str = "127.0.0.1",
-                port: int = 8080) -> ThreadingHTTPServer:
+                port: int = 8080,
+                max_wait_s: float = _MAX_WAIT_S) -> ThreadingHTTPServer:
     """A ready-to-run threaded HTTP server bound to (host, port); the
     caller owns ``serve_forever``/``shutdown`` (and the service's
-    ``start``/``close``)."""
+    ``start``/``close``). ``max_wait_s`` clamps client-requested
+    ``POST /count`` waits (handler-thread containment)."""
     httpd = ThreadingHTTPServer((host, port), _Handler)
     httpd.daemon_threads = True
     httpd.svc = svc
+    httpd.max_wait_s = float(max_wait_s)
     return httpd
 
 
 def serve_forever(svc: AsyncCountingService, host: str = "127.0.0.1",
-                  port: int = 8080) -> ThreadingHTTPServer:
+                  port: int = 8080,
+                  max_wait_s: float = _MAX_WAIT_S) -> ThreadingHTTPServer:
     """Start the dispatcher + HTTP server on a daemon thread; returns the
     server (``.shutdown()`` to stop)."""
     svc.start()
-    httpd = make_server(svc, host, port)
+    httpd = make_server(svc, host, port, max_wait_s=max_wait_s)
     t = threading.Thread(target=httpd.serve_forever,
                          name="pgbsc-http", daemon=True)
     t.start()

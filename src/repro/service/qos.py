@@ -189,6 +189,12 @@ class AdmissionQueue:
             _metrics.gauge("service_queue_depth").set(0)
         return items
 
+    def contents(self) -> list:
+        """Queued items, oldest first, without draining (supervision uses
+        this to tell drained-but-unattached requests from queued ones)."""
+        with self._lock:
+            return list(self._items)
+
     def __len__(self) -> int:
         with self._lock:
             return len(self._items)

@@ -27,6 +27,7 @@ cross-request batching and resume are estimate-invariant.
 from __future__ import annotations
 
 import os
+import random
 import tempfile
 import time
 import dataclasses
@@ -36,6 +37,11 @@ from repro.core.runner import EstimatorRunner, engine_counter
 from repro.graph.structure import Graph
 from repro.obs import metrics as _metrics
 from repro.obs import tracing as _tracing
+from repro.resilience import faults as _faults
+from repro.resilience.degradation import (BreakerBoard, CircuitOpen,
+                                          DegradationState)
+from repro.resilience.retry import (DispatchTimeout, RetryPolicy,
+                                    run_with_timeout)
 from repro.service.cache import EngineCache, EstimateCache
 from repro.service.requests import (CountRequest, RequestResult,
                                     RequestStatus, RunningStat)
@@ -55,6 +61,13 @@ class _Group:
     history: list[float]         # history[i] = scaled sample of iteration i
     cursor: int                  # next fresh iteration id (== len(history))
     members: list[str]
+    # rebuild identity (degradation-ladder step-down/re-promotion swaps the
+    # engine underneath the runner without losing the sample stream)
+    spec: object = None
+    engine_name: str = "pgbsc"
+    plan_name: str = "optimized"
+    seed: int = 0
+    label: str = ""              # fault-point context / breaker label
 
 
 @dataclasses.dataclass
@@ -68,6 +81,7 @@ class _ReqState:
     from_cache: bool = False
     result: RequestResult | None = None
     error: str | None = None
+    error_class: str | None = None   # structured error (exception class)
     t_submit: float = 0.0
     # latency attribution (perf_counter clock): submit -> attach start is
     # queue time, engine build inside attach is compile time, attach end ->
@@ -115,6 +129,20 @@ class CountingService:
     engine_kw:
         Extra build options forwarded to every engine construction (e.g.
         ``spmm_method``); part of the engine-cache key.
+    retry_policy:
+        Dispatch-path containment (:class:`~repro.resilience.retry.
+        RetryPolicy`): per-dispatch retry budget, jittered exponential
+        backoff, and (when ``timeout_s`` is set) a wall-clock watchdog
+        that abandons hung dispatches. None = the default policy (4
+        attempts, no watchdog).
+    degrade_after / degrade_cooldown_s:
+        Degradation-ladder shape: consecutive failures per step-down, and
+        the failure-free interval before a one-rung re-promotion.
+    breaker_threshold / breaker_cooldown_s:
+        Circuit breaker per dispatch group: consecutive *exhausted*
+        dispatches before the group's circuit opens (poison quarantine —
+        requests fail fast instead of retrying forever), and the cool-down
+        before a half-open trial dispatch.
     """
 
     def __init__(self, *, ledger_root: str | None = None,
@@ -124,7 +152,11 @@ class CountingService:
                  checkpoint_every: int | None = None,
                  batch_size: int | None = None,
                  memory_budget_bytes: int | None = None,
-                 engine_kw: dict | None = None):
+                 engine_kw: dict | None = None,
+                 retry_policy: RetryPolicy | None = None,
+                 degrade_after: int = 2, degrade_cooldown_s: float = 60.0,
+                 breaker_threshold: int = 3,
+                 breaker_cooldown_s: float = 30.0):
         self.ledger_root = ledger_root or tempfile.mkdtemp(
             prefix="pgbsc_service_")
         # explicit None checks: both caches define __len__, so a fresh
@@ -143,6 +175,14 @@ class CountingService:
         if memory_budget_bytes is not None:
             self.engine_kw["memory_budget_bytes"] = int(memory_budget_bytes)
         self.memory_budget_bytes = memory_budget_bytes
+        self.retry_policy = retry_policy or RetryPolicy()
+        self.degrade_after = int(degrade_after)
+        self.degrade_cooldown_s = float(degrade_cooldown_s)
+        self._breakers = BreakerBoard(threshold=breaker_threshold,
+                                      cooldown_s=breaker_cooldown_s)
+        self._ladders: dict[tuple, DegradationState] = {}
+        # jittered-backoff stream (seeded: chaos runs are reproducible)
+        self._retry_rng = random.Random(0xC0FFEE)
         self.graphs: dict[str, Graph] = {}
         self._requests: dict[str, _ReqState] = {}
         self._groups: dict[tuple, _Group] = {}
@@ -215,21 +255,85 @@ class CountingService:
             _metrics.counter("service_requests_total",
                              status="cancelled").inc()
 
+    # ----------------------------------------------------------- resilience
+    def _ladder_for(self, key: tuple) -> DegradationState:
+        """The degradation ladder for one engine-build identity (the group
+        key minus the seed: graph, template, engine, plan)."""
+        lk = key[:4]
+        lad = self._ladders.get(lk)
+        if lad is None:
+            lad = DegradationState(engine=str(key[2]),
+                                   template=str(key[1])[:8],
+                                   step_after=self.degrade_after,
+                                   cooldown_s=self.degrade_cooldown_s)
+            self._ladders[lk] = lad
+        return lad
+
+    @staticmethod
+    def _group_label(request: CountRequest, fingerprint: str) -> str:
+        return (f"{fingerprint[:8]}:{request.spec.canonical_hash[:8]}:"
+                f"{request.engine}:{request.plan}:s{request.seed}")
+
+    def _fail_member(self, st: _ReqState, exc: BaseException) -> None:
+        st.status = RequestStatus.FAILED
+        st.error = f"{type(exc).__name__}: {exc}"
+        st.error_class = type(exc).__name__
+        _metrics.counter("service_requests_total", status="failed").inc()
+
+    def _rebuild_group_engine(self, grp: _Group,
+                              ladder: DegradationState) -> None:
+        """Swap the group's engine for one built at the ladder's current
+        level. The runner (and its ledger) survive — the sample stream is
+        a pure function of ``(seed, iteration id)``, so an engine swap is
+        estimate-invariant."""
+        g = self.graphs[grp.graph_name]
+        eng = self.engine_cache.get(g, grp.spec, grp.engine_name,
+                                    grp.plan_name,
+                                    **ladder.apply(self.engine_kw))
+        grp.engine = eng
+        grp.runner.counter = engine_counter(
+            eng, seed=grp.seed, batch_size=self.batch_size, label=grp.label)
+        _metrics.counter("engine_rebuilds_total",
+                         level=ladder.level_name).inc()
+
+    def resilience_state(self) -> dict:
+        """Degradation-ladder and circuit-breaker state (``/healthz``)."""
+        ladders = {}
+        for (fp, th, eng, plan), lad in self._ladders.items():
+            if lad.level > 0:
+                ladders[f"{str(th)[:8]}:{eng}:{plan}"] = lad.snapshot()
+        return {"degraded_ladders": ladders,
+                "ladder_total": len(self._ladders),
+                "breakers": self._breakers.snapshot()}
+
     # ----------------------------------------------------------- scheduling
     def _build_group(self, st: _ReqState) -> tuple[_Group, float]:
         """Construct the dispatch group for ``st``'s request: engine build
         (or cache hit) plus ledger resume. This is the slow half of attach
         — the async front end runs it outside its admission lock so a cold
         compile never blocks new submissions. Returns ``(group,
-        build_seconds)``; the caller registers the group."""
+        build_seconds)``; the caller registers the group.
+
+        Builds run at the group's degradation-ladder level; a failed build
+        that steps the ladder down (e.g. an OOM at the fused/bf16 level)
+        retries at the degraded level before giving up."""
         g = self.graphs[st.request.graph]
         spec = st.request.spec
         t = spec.tree
         key = st.request.group_key(g.fingerprint)
+        label = self._group_label(st.request, g.fingerprint)
+        ladder = self._ladder_for(key)
         t_build = time.perf_counter()
-        eng = self.engine_cache.get(
-            g, spec, st.request.engine,
-            st.request.plan, **self.engine_kw)
+        while True:
+            try:
+                eng = self.engine_cache.get(
+                    g, spec, st.request.engine,
+                    st.request.plan, **ladder.apply(self.engine_kw))
+                break
+            except Exception:
+                if not ladder.on_failure(reason="build_error"):
+                    raise
+                # stepped down: retry the build with the degraded options
         build_s = time.perf_counter() - t_build
         scale = 1.0 / (t.automorphisms * colorful_probability(t.k))
         # canonical hash, not name: two spellings of one tree resume
@@ -240,7 +344,7 @@ class CountingService:
             f"{st.request.engine}_{st.request.plan}_s{st.request.seed}")
         runner = EstimatorRunner(
             engine_counter(eng, seed=st.request.seed,
-                           batch_size=self.batch_size),
+                           batch_size=self.batch_size, label=label),
             k=t.k, automorphisms=t.automorphisms, n_iterations=None,
             ledger_dir=ledger_dir,
             checkpoint_every=self.checkpoint_every,
@@ -252,7 +356,10 @@ class CountingService:
             history.append(led[len(history)] * scale)
         return _Group(key=key, graph_name=st.request.graph, runner=runner,
                       engine=eng, scale=scale, history=history,
-                      cursor=len(history), members=[]), build_s
+                      cursor=len(history), members=[], spec=spec,
+                      engine_name=st.request.engine,
+                      plan_name=st.request.plan, seed=st.request.seed,
+                      label=label), build_s
 
     def _attach(self, rid: str, st: _ReqState) -> None:
         t_start = time.perf_counter()
@@ -348,25 +455,83 @@ class CountingService:
 
     def _dispatch_ids(self, grp: _Group, ids: list[int]) -> bool:
         """Run one planned round and append its scaled samples to the group
-        history; returns False when the dispatch raised (live members are
-        marked FAILED). The runner checkpoints the ledger per batch, so
-        samples computed for a request cancelled mid-dispatch are still
-        flushed and serve future joiners."""
-        t_disp = time.perf_counter()
-        try:
-            with _tracing.span("service.dispatch",
-                               group=grp.graph_name,
-                               engine=grp.key[2], n=len(ids),
-                               tenants=len(self._live_members(grp))):
-                with _tracing.profiled_dispatch():
-                    per = grp.runner.run_iterations(ids)
-        except Exception as exc:
+        history; returns False when containment gave up (live members are
+        marked FAILED with a structured error). The runner checkpoints the
+        ledger per batch, so samples computed for a request cancelled
+        mid-dispatch are still flushed and serve future joiners.
+
+        Containment order per round:
+
+        1. **circuit breaker** — an open breaker fails the round fast
+           (:class:`CircuitOpen`), no device work, no retries;
+        2. **re-promotion** — a degraded ladder past its cooldown steps up
+           one rung and the engine is rebuilt at the better level;
+        3. **watchdog + retry** — each attempt runs under the policy's
+           wall-clock timeout (hung dispatches are abandoned, not joined
+           forever); failures step the ladder (rebuilding the engine at
+           the degraded level) and back off with seeded jitter until the
+           attempt budget is exhausted.
+
+        Because samples are pure functions of ``(seed, iteration id)``, a
+        retried or degraded dispatch reproduces bitwise-identical
+        estimates — containment never perturbs answers.
+        """
+        ladder = self._ladder_for(grp.key)
+        breaker = self._breakers.get(grp.key, label=grp.label)
+        if not breaker.allow():
+            exc = CircuitOpen(grp.label, breaker.failures)
             for m in self._live_members(grp):
-                m.status = RequestStatus.FAILED
-                m.error = f"{type(exc).__name__}: {exc}"
-                _metrics.counter("service_requests_total",
-                                 status="failed").inc()
+                self._fail_member(m, exc)
             return False
+        if ladder.maybe_promote():
+            try:
+                self._rebuild_group_engine(grp, ladder)
+            except Exception:
+                ladder.on_failure(reason="rebuild_error")
+
+        policy = self.retry_policy
+
+        def attempt_fn(cancelled):
+            _faults.inject("dispatch.hang", context=grp.label)
+            if cancelled.is_set():      # watchdog already gave up on us
+                return None
+            return grp.runner.run_iterations(ids)
+
+        per = None
+        last_exc: BaseException | None = None
+        for attempt in range(1, policy.max_attempts + 1):
+            t_disp = time.perf_counter()
+            try:
+                with _tracing.span("service.dispatch",
+                                   group=grp.graph_name,
+                                   engine=grp.key[2], n=len(ids),
+                                   tenants=len(self._live_members(grp)),
+                                   attempt=attempt):
+                    with _tracing.profiled_dispatch():
+                        per = run_with_timeout(attempt_fn, policy.timeout_s,
+                                               name=grp.label)
+                break
+            except Exception as exc:
+                last_exc = exc
+                reason = "timeout" if isinstance(exc, DispatchTimeout) \
+                    else "error"
+                if ladder.on_failure(reason=f"dispatch_{reason}"):
+                    try:
+                        self._rebuild_group_engine(grp, ladder)
+                    except Exception:
+                        pass        # keep the old engine; retry may still work
+                if attempt >= policy.max_attempts:
+                    break
+                _metrics.counter("dispatch_retries_total",
+                                 reason=reason).inc()
+                time.sleep(policy.delay(attempt, self._retry_rng))
+        if per is None:
+            breaker.on_failure()
+            for m in self._live_members(grp):
+                self._fail_member(m, last_exc)
+            return False
+        breaker.on_success()
+        ladder.on_success()
         _metrics.counter("service_dispatches_total").inc()
         _metrics.histogram("service_dispatch_seconds").observe(
             time.perf_counter() - t_disp)
@@ -391,10 +556,7 @@ class CountingService:
                     try:
                         self._attach(rid, st)
                     except Exception as exc:  # unknown engine/plan, build
-                        st.status = RequestStatus.FAILED
-                        st.error = f"{type(exc).__name__}: {exc}"
-                        _metrics.counter("service_requests_total",
-                                         status="failed").inc()
+                        self._fail_member(st, exc)
             self._consume_and_retire()
             for grp in self._groups.values():
                 ids = self._plan_dispatch(grp)
